@@ -1,0 +1,310 @@
+"""Benchmarks reproducing the paper's tables/figures at laptop scale.
+
+One function per paper artifact (each returns rows of
+``name,metric,value``):
+
+  fig1_scale_formats   — 350M-family Llama, FP4 E2M1 data, block 16, scale
+                         formats E1M6..E8M0: final train loss per format.
+  fig2_block_sizes     — block sizes {8,16,32,64,128} × scales {E8M0,E4M3}.
+  fig3_rounding_modes  — SR applied at each of the six GEMM points alone.
+  fig4_quadratic       — the §4 toy quadratic with σ_q = k·σ_crit.
+  fig5_threshold_model — 60M-family model, mid-training precision switch,
+                         gradient-to-noise ratio vs √3.
+  fig6_fqt_vs_bf16     — the main experiment: NVFP4 FQT vs BF16 + QAF gap
+                         closing (reduced: ~10M params, few hundred steps).
+  table2_settings      — the quantization settings comparison (static).
+  table3_downstream    — proxy: held-out perplexity BF16 vs FP4 vs FP4+QAF.
+
+Scale note: the paper trains 350M/7B models for 10⁵ steps on 256
+accelerators; these benches shrink width/steps so each runs in minutes on
+CPU while preserving every qualitative claim (ordering of formats, SR/RtN
+asymmetry, √3 transition, QAF gap-closing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import fqt, threshold
+from repro.core.quantize import NVFP4, MXFP4, BlockQuantSpec
+from repro.data.pipeline import DataConfig, SyntheticLM, make_eval_batches
+from repro.models import registry
+from repro.optim import adamw, schedule
+from repro.train import TrainConfig, init_state, make_train_step
+
+
+# ---- shared reduced-scale training loop ---------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchScale:
+    steps: int = 120
+    batch: int = 8
+    seq: int = 64
+    lr: float = 1e-3
+    seed: int = 0
+    arch: str = "llama2-60m"
+    sched_steps: int = 0     # >0: schedule horizon != executed steps
+
+
+def train_loss_curve(qcfg: fqt.QuantConfig, scale: BenchScale,
+                     eval_every: int = 0,
+                     sigma_spec=None) -> Tuple[List[float], Dict]:
+    """Train the reduced model with the given quant config; returns the loss
+    curve (and the final state bundle for follow-up phases)."""
+    cfg = get_config(scale.arch).smoke()
+    tcfg = TrainConfig(
+        opt=adamw.AdamWConfig(lr_peak=scale.lr),
+        sched=schedule.ScheduleConfig(
+            peak_lr=scale.lr, warmup_steps=20,
+            total_steps=scale.sched_steps or scale.steps),
+        remat=False, probe_sigma=True, sigma_spec=sigma_spec,
+    )
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=scale.seq,
+                                  global_batch=scale.batch,
+                                  seed=1234 + scale.seed))
+    state = init_state(cfg, tcfg, jax.random.PRNGKey(scale.seed))
+    step_fn = make_train_step(cfg, qcfg, tcfg)
+    losses, gnrs = [], []
+    for step in range(scale.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+        gnrs.append(float(m["gnr"]))
+    return losses, {"state": state, "cfg": cfg, "tcfg": tcfg, "data": data,
+                    "gnr": gnrs}
+
+
+def _tail(losses: List[float], k: int = 10) -> float:
+    return float(np.mean(losses[-k:]))
+
+
+# ---- Fig. 1: scale-format sweep -------------------------------------------------
+
+
+def fig1_scale_formats(scale: Optional[BenchScale] = None):
+    scale = scale or BenchScale()
+    rows = []
+    for sf in ("e1m6", "e2m5", "e3m4", "e4m3", "e5m2", "e6m1", "e8m0"):
+        spec = BlockQuantSpec(data_fmt="e2m1", scale_fmt=sf, block=16,
+                              two_level=(sf != "e8m0"))
+        qcfg = fqt.fqt_config(spec)
+        losses, _ = train_loss_curve(qcfg, scale)
+        rows.append(("fig1_scale_format", sf, _tail(losses)))
+    return rows
+
+
+# ---- Fig. 2: block-size sweep ----------------------------------------------------
+
+
+def fig2_block_sizes(scale: Optional[BenchScale] = None):
+    scale = scale or BenchScale()
+    rows = []
+    for sf in ("e8m0", "e4m3"):
+        for block in (8, 16, 32, 64):
+            spec = BlockQuantSpec(data_fmt="e2m1", scale_fmt=sf, block=block,
+                                  two_level=(sf != "e8m0"))
+            losses, _ = train_loss_curve(fqt.fqt_config(spec), scale)
+            rows.append((f"fig2_block_{sf}", str(block), _tail(losses)))
+    return rows
+
+
+# ---- Fig. 3: rounding-mode sweep ---------------------------------------------------
+
+
+def fig3_rounding_modes(scale: Optional[BenchScale] = None):
+    scale = scale or BenchScale()
+    rows = []
+    base, _ = train_loss_curve(fqt.fqt_config(NVFP4, frozenset()), scale)
+    rows.append(("fig3_sr_point", "none(all_rtn)", _tail(base)))
+    for point in fqt.POINTS:
+        qcfg = fqt.fqt_config(NVFP4, frozenset({point}))
+        losses, _ = train_loss_curve(qcfg, scale)
+        rows.append(("fig3_sr_point", point, _tail(losses)))
+    paper, _ = train_loss_curve(fqt.nvfp4_paper_config(), scale)
+    rows.append(("fig3_sr_point", "paper(bwd_g+upd_g+upd_a)", _tail(paper)))
+    return rows
+
+
+# ---- Fig. 4: quadratic toy model ----------------------------------------------------
+
+
+def fig4_quadratic(d: int = 256, steps: int = 300):
+    """GD on ½·θᵀHθ with FIXED gradient noise σ_q = k·σ_crit(θ₀) (§4.2).
+
+    σ is pinned at k× the critical level of the INITIAL gradient: runs
+    with k≥1 start at/below the √3 threshold and stall near their noise
+    floor; k<1 tracks noiseless descent until ‖∇L‖ decays to √(3d)·σ.
+    Reported: final loss (stall level) — the paper's Fig. 4 ordering.
+    """
+    rng = np.random.default_rng(0)
+    lam = rng.uniform(0.5, 1.5, size=d)           # concentrated spectrum
+    theta0 = rng.standard_normal(d)
+    g0 = lam * theta0
+    sigma_crit0 = float(np.linalg.norm(g0)) / np.sqrt(3 * d)
+    rows = []
+    for k in (2.0, 1.0, 0.5, 0.0):
+        sigma = k * sigma_crit0
+        theta = jnp.asarray(theta0)
+        lamj = jnp.asarray(lam)
+        key = jax.random.PRNGKey(1)
+        losses = []
+        for t in range(steps):
+            g = lamj * theta
+            gnorm = float(jnp.linalg.norm(g))
+            key, sub = jax.random.split(key)
+            gq = g + sigma * jax.random.normal(sub, (d,))
+            # optimal step size under noise (paper Step 6)
+            num = gnorm ** 2
+            den = float(jnp.sum(lamj * g * g)) + sigma ** 2 * \
+                float(jnp.sum(lamj))
+            eta = num / max(den, 1e-30)
+            theta = theta - eta * gq
+            losses.append(float(0.5 * jnp.sum(lamj * theta * theta)))
+        rows.append(("fig4_quadratic_k", str(k), losses[-1]))
+    return rows
+
+
+# ---- Fig. 5: √3 threshold on a real model --------------------------------------------
+
+
+def fig5_threshold_model(scale: Optional[BenchScale] = None,
+                         switch_at: Optional[int] = None):
+    """Low-precision pretrain, then mid-training switch of the backward
+    path to BF16 (the paper's Fig. 5 protocol); reports the loss gap to a
+    BF16 baseline before/after the switch and the gradient-to-noise ratio.
+
+    Scale note: at smoke scale NVFP4 noise is NOT binding (the ratio stays
+    ≫√3 for the first few hundred steps), so — like the paper drives a 60M
+    model into the binding regime with long training — we use a coarser
+    format (E2M1 data, block-128 E8M0 scales, SR everywhere) whose noise
+    puts the ratio near/below √3 from the start.  The claim validated is
+    the paper's: when the ratio is below √3, raising backward precision
+    closes the gap to the BF16 baseline.
+    """
+    from repro.core.quantize import BlockQuantSpec
+    scale = scale or BenchScale(steps=160)
+    switch_at = switch_at or scale.steps // 2
+
+    base_losses, _ = train_loss_curve(fqt.bf16_config(), scale)
+
+    noisy_spec = BlockQuantSpec(data_fmt="e2m1", scale_fmt="e8m0",
+                                block=128, two_level=False,
+                                stochastic=True)
+    # NVFP4 forward; COARSE SR backward/update — isolates gradient noise
+    # (the quantity the §4 theory bounds) exactly as the paper's protocol.
+    from repro.core.quantize import NVFP4 as _NV
+    noisy_cfg = fqt.QuantConfig(
+        fwd_w=_NV, fwd_a=_NV,
+        bwd_w=noisy_spec, bwd_g=noisy_spec,
+        upd_g=noisy_spec, upd_a=noisy_spec)
+
+    # phase 1 (schedule horizon = full run)
+    losses1, bundle = train_loss_curve(
+        noisy_cfg,
+        dataclasses.replace(scale, steps=switch_at,
+                            sched_steps=scale.steps),
+        sigma_spec=noisy_spec)
+    # phase 2: precision switch — backward/update to BF16, forward stays FP4
+    cfg, tcfg, data = bundle["cfg"], bundle["tcfg"], bundle["data"]
+    state = bundle["state"]
+    qaf_cfg = fqt.QuantConfig(fwd_w=_NV, fwd_a=_NV)
+    step_fn = make_train_step(cfg, qaf_cfg, tcfg)
+    losses2 = []
+    for step in range(switch_at, scale.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        state, m = step_fn(state, batch)
+        losses2.append(float(m["loss"]))
+
+    gap_before = _tail(losses1) - _tail(base_losses[:switch_at])
+    gap_after = _tail(losses2) - _tail(base_losses)
+    return [
+        ("fig5_gap", "before_switch", gap_before),
+        ("fig5_gap", "after_switch", gap_after),
+        ("fig5_gap", "closed_fraction", 1.0 - gap_after /
+         max(gap_before, 1e-9)),
+        ("fig5_gnr", "at_switch", bundle["gnr"][-1]),
+        ("fig5_gnr", "sqrt3_threshold", threshold.SQRT3),
+    ]
+
+
+# ---- Fig. 6 + Table 3: main experiment + QAF ------------------------------------------
+
+
+def fig6_fqt_vs_bf16(scale: Optional[BenchScale] = None,
+                     qaf_steps: int = 60):
+    scale = scale or BenchScale(steps=200)
+    # BF16 reference runs through the QAF horizon too (matched step counts)
+    bf16_losses, bf16_bundle = train_loss_curve(
+        fqt.bf16_config(),
+        dataclasses.replace(scale, steps=scale.steps + qaf_steps,
+                            sched_steps=scale.steps))
+    fp4_losses, fp4_bundle = train_loss_curve(fqt.nvfp4_paper_config(),
+                                              scale)
+
+    # QAF phase: continue FP4 state with FP4-fwd/BF16-bwd + LR re-warm
+    cfg, data = fp4_bundle["cfg"], fp4_bundle["data"]
+    tcfg = fp4_bundle["tcfg"]
+    qaf_tcfg = dataclasses.replace(
+        tcfg, sched=schedule.ScheduleConfig(
+            peak_lr=tcfg.sched.peak_lr * 0.5,
+            warmup_steps=max(qaf_steps // 4, 1),
+            total_steps=qaf_steps, min_lr_ratio=0.0,
+            start_step=scale.steps))
+    state = fp4_bundle["state"]
+    # the step fn donates its input state — keep a copy for the eval below
+    fp4_params = jax.tree.map(jnp.copy, state.params)
+    state = jax.tree.map(jnp.copy, state)
+    step_fn = make_train_step(cfg, fqt.qaf_config(), qaf_tcfg)
+    qaf_losses = []
+    for step in range(scale.steps, scale.steps + qaf_steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        state, m = step_fn(state, batch)
+        qaf_losses.append(float(m["loss"]))
+
+    # Table-3 proxy: held-out eval perplexity (synthetic stream)
+    def eval_ppl(params, qcfg):
+        dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=scale.seq,
+                        global_batch=scale.batch, seed=1234 + scale.seed)
+        tot = 0.0
+        for b in make_eval_batches(dc, n=4):
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            loss, _ = registry.loss_fn(params, cfg, qcfg, batch, seed=0,
+                                       remat=False)
+            tot += float(loss)
+        return float(np.exp(tot / 4))
+
+    fp4_eval = fqt.qaf_config()          # deploy-time: FP4 forward
+    rows = [
+        ("fig6_final_loss", "bf16@200", _tail(bf16_losses[:scale.steps])),
+        ("fig6_final_loss", "fp4@200", _tail(fp4_losses)),
+        ("fig6_final_loss", "bf16@260", _tail(bf16_losses)),
+        ("fig6_final_loss", "fp4+qaf@260", _tail(qaf_losses)),
+        ("fig6_gap", "fp4_vs_bf16", _tail(fp4_losses)
+         - _tail(bf16_losses[:scale.steps])),
+        ("fig6_gap", "qaf_vs_bf16", _tail(qaf_losses)
+         - _tail(bf16_losses)),
+        ("table3_ppl", "bf16", eval_ppl(bf16_bundle["state"].params,
+                                        fqt.bf16_config())),
+        ("table3_ppl", "fp4", eval_ppl(fp4_params, fp4_eval)),
+        ("table3_ppl", "fp4+qaf", eval_ppl(state.params, fp4_eval)),
+    ]
+    return rows
+
+
+def table2_settings():
+    """The quantization-settings comparison (static facts from the code)."""
+    rows = []
+    for name, mk in (("ours", fqt.nvfp4_paper_config),
+                     ("wang2025", fqt.wang2025_config),
+                     ("tseng2025", fqt.tseng2025_config)):
+        qc = mk()
+        n_fp4 = sum(getattr(qc, p) is not None for p in fqt.POINTS)
+        rows.append(("table2_fp4_points", name, float(n_fp4)))
+    return rows

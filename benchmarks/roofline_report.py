@@ -1,0 +1,76 @@
+"""Render the §Roofline table from dry-run JSON records.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--dir results/dryrun]
+  PYTHONPATH=src python -m benchmarks.roofline_report --md   # markdown
+
+Columns: the three roofline terms (seconds), dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS (useful fraction), roofline-bound MFU, and peak
+temp bytes/device from memory_analysis.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname: str, pattern: str = "*"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirname, pattern + ".json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s*1e3:10.2f}" if s is not None else "         -"
+
+
+def row(r, md=False):
+    sep = " | " if md else "  "
+    if r["status"] == "skip":
+        return sep.join([f"{r['arch']:<22}", f"{r['shape']:<12}",
+                         "SKIP: " + r["reason"][:60]])
+    if r["status"] != "ok":
+        return sep.join([f"{r['arch']:<22}", f"{r['shape']:<12}",
+                         "ERROR: " + r.get("error", "")[:60]])
+    rf = r["roofline"]
+    uf = rf.get("useful_fraction")
+    mfu = rf.get("mfu_bound")
+    temp = (r["bytes_per_device"].get("temp") or 0) / 2 ** 30
+    return sep.join([
+        f"{r['arch']:<22}", f"{r['shape']:<12}", f"{r['kind']:<7}",
+        fmt_ms(rf["t_compute"]), fmt_ms(rf["t_memory"]),
+        fmt_ms(rf["t_collective"]), f"{rf['bottleneck']:<10}",
+        f"{100*uf:6.1f}%" if uf else "     -",
+        f"{100*mfu:6.2f}%" if mfu else "     -",
+        f"{temp:8.2f}",
+    ])
+
+
+HEADER = ["arch", "shape", "kind", "t_comp(ms)", "t_mem(ms)", "t_coll(ms)",
+          "bottleneck", "useful", "mfu_bound", "temp(GiB)"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--pattern", default="*1pod*")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    recs = load(args.dir, args.pattern)
+    sep = " | " if args.md else "  "
+    print(sep.join(f"{h:<12}" for h in HEADER))
+    if args.md:
+        print(sep.join(["---"] * len(HEADER)))
+    for r in recs:
+        print(row(r, args.md))
+    ok = [r for r in recs if r["status"] == "ok"]
+    print(f"\n{len(ok)} ok / {len(recs)} cells; bottleneck counts:",
+          {b: sum(1 for r in ok if r['roofline']['bottleneck'] == b)
+           for b in ("compute", "memory", "collective")})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Benchmark harness driver.
+
+  PYTHONPATH=src python -m benchmarks.run              # quick set
+  PYTHONPATH=src python -m benchmarks.run --full       # every paper figure
+  PYTHONPATH=src python -m benchmarks.run --bench fig3 # one artifact
+
+Prints ``bench,name,metric`` CSV (one row group per paper table/figure) and
+a kernel micro-timing section.  Roofline numbers come from the dry-run
+(launch/dryrun.py) — see benchmarks/roofline_report.py for the table.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import paper_figs as pf
+
+
+def kernel_microbench(reps: int = 5):
+    """Wall-time of the jnp fake-quant FQT matmul vs plain bf16 matmul on
+    this host (CPU — relative numbers only; TPU perf comes from §Roofline)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import fqt
+
+    rows = []
+    M = K = N = 1024
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.bfloat16)
+
+    def timeit(fn, *args):
+        jax.tree.leaves(fn(*args))[0].block_until_ready()   # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(*args)
+            jax.tree.leaves(out)[0].block_until_ready()
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    mm = jax.jit(lambda a, b: a @ b)
+    rows.append(("kernel_us", "bf16_matmul_1k", timeit(mm, x, w)))
+    fq = jax.jit(lambda a, b: fqt.fp4_matmul(
+        a, b, cfg=fqt.nvfp4_paper_config(), seed=jnp.uint32(1)))
+    rows.append(("kernel_us", "fqt_fwd_matmul_1k", timeit(fq, x, w)))
+    return rows
+
+
+BENCHES = {
+    "fig1": pf.fig1_scale_formats,
+    "fig2": pf.fig2_block_sizes,
+    "fig3": pf.fig3_rounding_modes,
+    "fig4": pf.fig4_quadratic,
+    "fig5": pf.fig5_threshold_model,
+    "fig6": pf.fig6_fqt_vs_bf16,
+    "table2": pf.table2_settings,
+    "kernels": kernel_microbench,
+}
+
+QUICK = ("table2", "fig4", "kernels", "fig5", "fig6")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="run every paper figure (hours on CPU)")
+    ap.add_argument("--bench", default=None, choices=sorted(BENCHES))
+    args = ap.parse_args(argv)
+
+    names = ([args.bench] if args.bench
+             else sorted(BENCHES) if args.full else list(QUICK))
+    print("bench,name,value")
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = BENCHES[name]()
+        except Exception as e:                                # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            continue
+        for group, key, val in rows:
+            print(f"{group},{key},{val:.6g}")
+        print(f"# {name} took {time.time() - t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

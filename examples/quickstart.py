@@ -1,0 +1,62 @@
+"""Quickstart: the paper's FP4 numerics in five minutes.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. Quantize a tensor to NVFP4 (block-16 E2M1 codes + E4M3 scales) with RtN
+   and SR; verify SR unbiasedness.
+2. Run one FQT matmul with the paper's six quantization points.
+3. Train a tiny Llama for 50 steps in full FP4 and watch the §4
+   gradient-to-noise monitor.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fqt
+from repro.core.quantize import NVFP4, block_quantize, fake_quant
+
+# ---- 1. NVFP4 block quantization ------------------------------------------------
+x = jax.random.normal(jax.random.PRNGKey(0), (4, 64), jnp.float32)
+qt = block_quantize(x, NVFP4)
+print("codes (E2M1 grid):", np.unique(np.abs(np.asarray(qt.codes)))[:8])
+print("scales shape:", qt.scales.shape, " tensor scale:", float(qt.tscale))
+print("max |dequant - x|:", float(jnp.max(jnp.abs(qt.dequant() - x))))
+
+# SR is unbiased: mean over draws converges to x
+sr = NVFP4.with_rounding(stochastic=True)
+draws = jnp.stack([fake_quant(x, sr, key=jax.random.PRNGKey(i))
+                   for i in range(128)])
+print("SR mean abs bias:", float(jnp.mean(jnp.abs(draws.mean(0) - x))))
+
+# ---- 2. one FQT matmul -----------------------------------------------------------
+qcfg = fqt.nvfp4_paper_config()   # paper eqs. 4-6: RtN fwd, SR bwd/update
+w = jax.random.normal(jax.random.PRNGKey(1), (64, 32), jnp.bfloat16)
+xb = x.astype(jnp.bfloat16)
+
+
+def loss(w):
+    y = fqt.fp4_matmul(xb, w, cfg=qcfg, seed=jnp.uint32(7))
+    return jnp.sum(y.astype(jnp.float32) ** 2)
+
+
+g = jax.grad(loss)(w)
+print("FQT matmul grad norm:", float(jnp.linalg.norm(g.astype(jnp.float32))))
+
+# ---- 3. 50 FP4 training steps ------------------------------------------------------
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.train import TrainConfig, init_state, make_train_step
+
+cfg = get_config("llama2-60m").smoke()
+tcfg = TrainConfig(remat=False)
+data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                              global_batch=8))
+state = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+step_fn = make_train_step(cfg, qcfg, tcfg)
+for step in range(50):
+    batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+    state, m = step_fn(state, batch)
+    if step % 10 == 0:
+        print(f"step {step:3d}  loss {float(m['loss']):.4f}  "
+              f"grad-to-noise {float(m['gnr']):.1f} (switch at √3≈1.73)")
+print("done — full FP4 training, loss is descending.")

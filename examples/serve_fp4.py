@@ -1,0 +1,43 @@
+"""Batched FP4 serving: prefill + decode through the Engine.
+
+Serves a reduced tinyllama with the NVFP4 forward path (the deployed
+numeric configuration the paper's QAF phase preserves), compares greedy
+outputs against a bf16-forward engine, and reports decode throughput.
+
+  PYTHONPATH=src python examples/serve_fp4.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import fqt
+from repro.models import registry
+from repro.serve import Engine, ServeConfig
+
+cfg = get_config("tinyllama-1.1b").smoke()
+params = registry.init_params(cfg, jax.random.PRNGKey(0))
+scfg = ServeConfig(batch_size=4, max_len=128, temperature=0.0)
+
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab_size, 16) for _ in range(4)]
+
+fp4 = Engine(cfg, params, scfg)                        # NVFP4 RtN forward
+bf16 = Engine(cfg, params, scfg, qcfg=fqt.bf16_config())
+
+t0 = time.perf_counter()
+out_fp4 = fp4.generate(prompts, max_new=24)
+t_fp4 = time.perf_counter() - t0
+out_bf16 = bf16.generate(prompts, max_new=24)
+
+agree = np.mean([
+    np.mean(a[: min(len(a), len(b))] == b[: min(len(a), len(b))])
+    for a, b in zip(out_fp4, out_bf16)])
+print(f"FP4 decode: {sum(map(len, out_fp4))} tokens in {t_fp4:.2f}s "
+      f"(incl. compile)")
+print(f"greedy agreement FP4 vs BF16 forward: {agree:.2f} "
+      "(untrained weights — quantization flips low-margin argmaxes; "
+      "trained+QAF models are tuned to the FP4 grid)")
+for i, o in enumerate(out_fp4[:2]):
+    print(f"seq {i}: {o[:12].tolist()}")

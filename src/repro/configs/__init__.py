@@ -1,0 +1,54 @@
+"""Assigned architecture configs (+ the paper's own Llama2 sizes).
+
+Each module exposes ``CONFIG``; ``get_config(name)`` resolves by arch id.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, SHAPES, SHAPES_BY_NAME  # noqa
+
+ARCH_IDS = (
+    "mixtral_8x7b",
+    "qwen3_moe_235b_a22b",
+    "whisper_base",
+    "internvl2_26b",
+    "zamba2_1p2b",
+    "qwen2p5_32b",
+    "codeqwen1p5_7b",
+    "tinyllama_1p1b",
+    "llama3_405b",
+    "xlstm_125m",
+    # the paper's own model family
+    "llama2_7b",
+    "llama2_350m",
+    "llama2_60m",
+)
+
+_ALIASES = {
+    "mixtral-8x7b": "mixtral_8x7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "whisper-base": "whisper_base",
+    "internvl2-26b": "internvl2_26b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "qwen2.5-32b": "qwen2p5_32b",
+    "codeqwen1.5-7b": "codeqwen1p5_7b",
+    "tinyllama-1.1b": "tinyllama_1p1b",
+    "llama3-405b": "llama3_405b",
+    "xlstm-125m": "xlstm_125m",
+    "llama2-7b": "llama2_7b",
+    "llama2-350m": "llama2_350m",
+    "llama2-60m": "llama2_60m",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+    if mod_name not in ARCH_IDS:
+        raise ValueError(f"unknown arch {name!r}; have {list(_ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,265 @@
+"""Generic low-precision floating-point formats and quantizers.
+
+This module is the numeric foundation of the FP4-FQT framework. It defines
+``FloatFormat`` — a generic (sign, exp_bits, man_bits) minifloat description —
+and grid-exact round-to-nearest-even (RtN) and stochastic-rounding (SR)
+quantizers that work for any such format.
+
+Conventions (see DESIGN.md §4):
+  * E2M1 (FP4 data):  no NaN/Inf, saturating, max 6.0 — matches
+    ``ml_dtypes.float4_e2m1fn``.
+  * E4M3 (NVFP4 scale): OCP e4m3fn, max 448 — matches
+    ``ml_dtypes.float8_e4m3fn``.
+  * E8M0 (MXFP4 scale): unsigned exponent-only — matches
+    ``ml_dtypes.float8_e8m0fnu``; block scales use the OCP MX
+    floor(log2(amax)) − emax rule (see quantize.py).
+  * Sweep formats E1M6..E6M1: our no-NaN convention,
+    max = 2^emax * (2 - 2^-M).
+
+All quantizers are pure jnp and jit/vmap/grad-safe (they are used inside
+custom_vjp rules).  RtN uses round-half-to-even.  SR is *grid exact*: the
+output is always one of the two representable neighbours and
+E[Q_SR(x)] == x for in-range x.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """A generic signed/unsigned minifloat format with subnormals."""
+
+    name: str
+    exp_bits: int
+    man_bits: int
+    signed: bool = True
+    # Exponent bias.  None => IEEE-style default 2^(E-1) - 1.
+    bias: Optional[int] = None
+    # Maximum finite value.  None => no-NaN convention 2^emax * (2 - 2^-M).
+    finite_max: Optional[float] = None
+
+    # ---- derived quantities -------------------------------------------------
+
+    @property
+    def ebias(self) -> int:
+        if self.bias is not None:
+            return self.bias
+        return (1 << (self.exp_bits - 1)) - 1 if self.exp_bits > 0 else 0
+
+    @property
+    def emax(self) -> int:
+        """Largest normal exponent (of the leading bit)."""
+        if self.finite_max is not None:
+            return int(np.floor(np.log2(self.finite_max)))
+        return (1 << self.exp_bits) - 1 - self.ebias
+
+    @property
+    def emin(self) -> int:
+        """Smallest normal exponent; subnormal ulp is 2^(emin - man_bits)."""
+        return 1 - self.ebias
+
+    @property
+    def max(self) -> float:
+        if self.finite_max is not None:
+            return self.finite_max
+        return float(2.0 ** self.emax * (2.0 - 2.0 ** (-self.man_bits)))
+
+    @property
+    def smallest_subnormal(self) -> float:
+        if self.man_bits == 0:
+            return float(2.0 ** self.emin)
+        return float(2.0 ** (self.emin - self.man_bits))
+
+    @property
+    def nbits(self) -> int:
+        return int(self.signed) + self.exp_bits + self.man_bits
+
+    def grid(self) -> np.ndarray:
+        """All non-negative representable values, ascending (numpy)."""
+        vals = [0.0]
+        for e in range(self.emin, self.emax + 1):
+            for m in range(1 << self.man_bits):
+                frac = 1.0 + m / (1 << self.man_bits)
+                vals.append(frac * 2.0 ** e)
+        # subnormals
+        for m in range(1, 1 << self.man_bits):
+            vals.append((m / (1 << self.man_bits)) * 2.0 ** self.emin)
+        vals = sorted(set(v for v in vals if v <= self.max + 1e-30))
+        return np.asarray(vals, dtype=np.float64)
+
+
+# ---- canonical formats -------------------------------------------------------
+
+E2M1 = FloatFormat("e2m1", exp_bits=2, man_bits=1, finite_max=6.0)
+E4M3 = FloatFormat("e4m3", exp_bits=4, man_bits=3, finite_max=448.0)
+E5M2 = FloatFormat("e5m2", exp_bits=5, man_bits=2, finite_max=57344.0)
+E8M0 = FloatFormat("e8m0", exp_bits=8, man_bits=0, signed=False,
+                   finite_max=float(2.0 ** 127))
+BF16 = FloatFormat("bf16", exp_bits=8, man_bits=7, finite_max=float(
+    2.0 ** 127 * (2.0 - 2.0 ** -7)))
+
+# Scale-format sweep of paper Fig. 1 (8-bit budget, sign bit unused except E8M0)
+E1M6 = FloatFormat("e1m6", exp_bits=1, man_bits=6)
+E2M5 = FloatFormat("e2m5", exp_bits=2, man_bits=5)
+# IEEE-style like ml_dtypes.float8_e3m4 (top exponent code reserved): max 15.5
+E3M4 = FloatFormat("e3m4", exp_bits=3, man_bits=4, finite_max=15.5)
+E6M1 = FloatFormat("e6m1", exp_bits=6, man_bits=1)
+
+SCALE_FORMATS = {
+    "e1m6": E1M6, "e2m5": E2M5, "e3m4": E3M4, "e4m3": E4M3,
+    "e5m2": E5M2, "e6m1": E6M1, "e8m0": E8M0,
+}
+
+FORMATS = dict(SCALE_FORMATS, e2m1=E2M1, bf16=BF16)
+
+
+def get_format(name: str) -> FloatFormat:
+    try:
+        return FORMATS[name.lower()]
+    except KeyError:
+        raise ValueError(f"unknown float format {name!r}; have {sorted(FORMATS)}")
+
+
+# ---- core grid math ----------------------------------------------------------
+
+
+def _ulp(absx: jax.Array, fmt: FloatFormat) -> jax.Array:
+    """Spacing of the representable grid at |x| (for in-range |x|).
+
+    For absx in [2^e, 2^(e+1)) with e in [emin, emax], the ulp is
+    2^(e - man_bits); below 2^emin the (subnormal) ulp is 2^(emin - man_bits).
+    Exact powers of two belong to the *upper* binade per frexp, which yields
+    the correct ulp for both RtN and floor-based SR.
+    """
+    # frexp: absx = m * 2^k with m in [0.5, 1)  =>  floor(log2 absx) = k - 1.
+    # NOTE: jnp.exp2 is *inexact* on the CPU backend (exp2(13.)=8192.004), so
+    # all power-of-two math here uses ldexp, which is exact.
+    _, k = jnp.frexp(absx)
+    e = jnp.clip(k - 1, fmt.emin, fmt.emax)
+    return jnp.ldexp(jnp.ones((), absx.dtype), e - fmt.man_bits)
+
+
+def quantize_rtn(x: jax.Array, fmt: FloatFormat) -> jax.Array:
+    """Round-to-nearest-even onto fmt's grid, saturating at fmt.max.
+
+    Returns values of x.dtype that lie exactly on the format grid.
+    """
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    sign = jnp.sign(x)
+    absx = jnp.minimum(jnp.abs(x), fmt.max)
+    ulp = _ulp(absx, fmt)
+    # round-half-to-even on the integer lattice absx/ulp
+    q = jnp.round(absx / ulp) * ulp
+    # Rounding up at a binade boundary can overshoot fmt.max (e.g. 5.9 -> 6 ok,
+    # but for fn formats with truncated top binade, e.g. e4m3 464 -> 480>448).
+    q = jnp.minimum(q, fmt.max)
+    out = sign * q
+    if not fmt.signed:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(orig_dtype)
+
+
+def quantize_sr_with_u(x: jax.Array, fmt: FloatFormat,
+                       u: jax.Array) -> jax.Array:
+    """Stochastic rounding with explicit uniforms u in [0, 1) (same shape as
+    x).  Grid-exact and unbiased in-range:  floor(|x|/ulp + u) * ulp.
+
+    This is the exact semantics the Pallas kernels implement, so it doubles
+    as their oracle.  Saturates at fmt.max (tail clipping is the only bias
+    source, as in hardware SR).
+    """
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    sign = jnp.sign(x)
+    absx = jnp.minimum(jnp.abs(x), fmt.max)
+    ulp = _ulp(absx, fmt)
+    q = jnp.floor(absx / ulp + u) * ulp
+    q = jnp.minimum(q, fmt.max)
+    out = sign * q
+    if not fmt.signed:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(orig_dtype)
+
+
+def uniform_from_bits(rbits: jax.Array) -> jax.Array:
+    """uint32 random bits -> uniform [0, 1) float32 (24-bit resolution).
+
+    Shared convention between the Pallas kernels (which consume raw
+    counter-based bits) and the jnp oracles.
+    """
+    return (rbits >> 8).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+
+
+def quantize_sr(x: jax.Array, fmt: FloatFormat, key: jax.Array) -> jax.Array:
+    """Stochastic rounding onto fmt's grid using a JAX PRNG key."""
+    rbits = jax.random.bits(key, shape=x.shape, dtype=jnp.uint32)
+    return quantize_sr_with_u(x, fmt, uniform_from_bits(rbits))
+
+
+def counter_bits(seed: jax.Array, shape) -> jax.Array:
+    """Counter-based random bits that FUSE into their consumer.
+
+    splitmix32-style avalanche hash of (seed, flat index): ~7 elementwise
+    ops that XLA fuses straight into the quantization fusion — zero extra
+    HBM traffic.  jax.random.bits (threefry) materializes the u32 tensor
+    through ~20 unfusable rolled ops; at FQT scale that was ~3 TB/device/
+    step of pure RNG traffic (EXPERIMENTS.md §Perf iteration 2).  SR needs
+    24 decorrelated uniform bits per element, not crypto — avalanche
+    quality is sufficient and is validated by the same unbiasedness tests.
+    Deterministic in (seed, index): replayable after checkpoint restart.
+    """
+    n = 1
+    for d in shape:
+        n *= int(d)
+    idx = jax.lax.iota(jnp.uint32, n).reshape(shape)
+    z = idx * jnp.uint32(0x9E3779B9) + jnp.asarray(seed, jnp.uint32)
+    z = (z ^ (z >> 16)) * jnp.uint32(0x85EBCA6B)
+    z = (z ^ (z >> 13)) * jnp.uint32(0xC2B2AE35)
+    z = z ^ (z >> 16)
+    # second mix round decorrelates consecutive indices fully
+    z = (z + jnp.uint32(0x9E3779B9))
+    z = (z ^ (z >> 15)) * jnp.uint32(0x2C1B3C6D)
+    z = (z ^ (z >> 12)) * jnp.uint32(0x297A2D39)
+    return z ^ (z >> 15)
+
+
+def quantize(x: jax.Array, fmt: FloatFormat, *, stochastic: bool = False,
+             key: Optional[jax.Array] = None) -> jax.Array:
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        return quantize_sr(x, fmt, key)
+    return quantize_rtn(x, fmt)
+
+
+# ---- E8M0 power-of-two helpers (OCP MX scale rule) ---------------------------
+
+
+def e8m0_floor(x: jax.Array) -> jax.Array:
+    """Largest power of two <= x (x > 0), clipped to E8M0 range."""
+    x = x.astype(jnp.float32)
+    _, k = jnp.frexp(x)
+    e = jnp.clip(k - 1, -127, 127)
+    return jnp.ldexp(jnp.ones((), jnp.float32), e)
+
+
+@lru_cache(maxsize=None)
+def _grid_device(fmt: FloatFormat):
+    return jnp.asarray(fmt.grid(), dtype=jnp.float32)
+
+
+def snap_distance(x: np.ndarray, fmt: FloatFormat) -> np.ndarray:
+    """Distance from each value of x to the nearest grid point (testing aid)."""
+    g = fmt.grid()
+    full = np.concatenate([-g[::-1], g]) if fmt.signed else g
+    idx = np.clip(np.searchsorted(full, x), 1, len(full) - 1)
+    lo, hi = full[idx - 1], full[idx]
+    return np.minimum(np.abs(x - lo), np.abs(x - hi))

@@ -1,0 +1,43 @@
+"""Quantization-Aware Finetuning (QAF) phase orchestration (paper §5).
+
+When FP4 pretraining stalls (the §4 threshold crosses √3, or a fixed token
+budget is reached), training continues with the *forward* GEMMs still in FP4
+— so the deployed model stays FP4-inference-compatible — while backward and
+update GEMMs run in BF16, restoring the gradient signal-to-noise ratio.  The
+LR is re-warmed (40 steps) and cosine-decayed from a reduced peak.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import fqt
+from repro.optim.schedule import ScheduleConfig, qaf_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class QAFConfig:
+    enabled: bool = True
+    auto_switch: bool = True        # switch on the §4 threshold crossing
+    fixed_switch_step: int = 0      # >0: switch at this step regardless
+    qaf_steps: int = 1000
+    peak_scale: float = 0.5
+
+
+def qaf_quant_config(pretrain_cfg: fqt.QuantConfig) -> fqt.QuantConfig:
+    """FP4 forward / BF16 backward+update, preserving fwd specs + impl."""
+    return fqt.QuantConfig(fwd_w=pretrain_cfg.fwd_w,
+                           fwd_a=pretrain_cfg.fwd_a,
+                           impl=pretrain_cfg.impl)
+
+
+def qaf_lr_schedule(base: ScheduleConfig, cfg: QAFConfig,
+                    start_step: int = 0) -> ScheduleConfig:
+    return qaf_schedule(base, cfg.qaf_steps, cfg.peak_scale, start_step)
+
+
+def should_switch(step: int, threshold_crossed: bool, cfg: QAFConfig) -> bool:
+    if not cfg.enabled:
+        return False
+    if cfg.fixed_switch_step and step >= cfg.fixed_switch_step:
+        return True
+    return cfg.auto_switch and bool(threshold_crossed)

@@ -1,0 +1,175 @@
+"""Block (micro-scaled) quantization: NVFP4, MXFP4 and the paper's sweeps.
+
+A *block-quantized* tensor stores, per contiguous block of ``block`` elements
+along the blocking axis:
+
+  * FP4 (``data_fmt``, default E2M1) codes, and
+  * one shared scale in ``scale_fmt`` (E4M3 for NVFP4, E8M0 for MXFP4), and
+  * (optionally, ``two_level=True``) one per-tensor scale that normalises the
+    block scales into the scale format's representable range — the NVFP4
+    hardware convention.  We round the tensor scale to a power of two so that
+    ``codes * block_scale * tensor_scale`` stays exactly representable in
+    bf16 (2-bit significand x 4-bit significand x 2^k <= 8-bit significand);
+    see DESIGN.md §4.
+
+The blocking axis must be the GEMM *contraction* axis of the operand as
+consumed (this is what Blackwell block-scaled MMA requires, and what the
+paper's six quantization points mean).  Operands therefore get re-quantized
+per GEMM, exactly as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats
+from repro.core.formats import FloatFormat, get_format
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockQuantSpec:
+    """How to block-quantize one GEMM operand."""
+
+    data_fmt: str = "e2m1"
+    scale_fmt: str = "e4m3"
+    block: int = 16
+    two_level: bool = True     # per-tensor pow2 scale under the block scale
+    stochastic: bool = False   # SR (True) or RtN (False)
+
+    @property
+    def data(self) -> FloatFormat:
+        return get_format(self.data_fmt)
+
+    @property
+    def scale(self) -> FloatFormat:
+        return get_format(self.scale_fmt)
+
+    def with_rounding(self, stochastic: bool) -> "BlockQuantSpec":
+        return dataclasses.replace(self, stochastic=stochastic)
+
+
+NVFP4 = BlockQuantSpec(data_fmt="e2m1", scale_fmt="e4m3", block=16,
+                       two_level=True)
+MXFP4 = BlockQuantSpec(data_fmt="e2m1", scale_fmt="e8m0", block=32,
+                       two_level=False)
+
+
+class QuantizedTensor(NamedTuple):
+    """codes * scales (block-broadcast) * tscale reconstructs the tensor.
+
+    ``codes`` hold *dequantized-grid* values (exact E2M1 grid points) in the
+    original dtype; ``scales`` has shape = codes.shape with the blocking axis
+    divided by ``block``; ``tscale`` is a scalar (1.0 when two_level=False).
+    """
+
+    codes: jax.Array
+    scales: jax.Array
+    tscale: jax.Array
+    axis: int
+    block: int
+
+    def dequant(self) -> jax.Array:
+        s = jnp.repeat(self.scales, self.block, axis=self.axis)
+        return (self.codes * s * self.tscale).astype(self.codes.dtype)
+
+
+def _norm_axis(ndim: int, axis: int) -> int:
+    return axis % ndim
+
+
+def _blocked(x: jax.Array, axis: int, block: int) -> jax.Array:
+    """Reshape so the blocking axis becomes (..., nblocks, block, ...)."""
+    axis = _norm_axis(x.ndim, axis)
+    if x.shape[axis] % block != 0:
+        raise ValueError(
+            f"axis {axis} of shape {x.shape} not divisible by block {block}")
+    new_shape = x.shape[:axis] + (x.shape[axis] // block, block) + x.shape[axis + 1:]
+    return x.reshape(new_shape)
+
+
+def _block_scales(absmax: jax.Array, spec: BlockQuantSpec,
+                  tscale: jax.Array) -> jax.Array:
+    """Quantized per-block scales from per-block absmax (fp32 in/out)."""
+    data_max = spec.data.max
+    if spec.scale_fmt == "e8m0":
+        # OCP MX rule: scale = 2^(floor(log2 amax) - emax_elem); here tscale==1.
+        scale = formats.e8m0_floor(absmax) / (2.0 ** spec.data.emax)
+        scale = jnp.where(absmax > 0, scale, 1.0)
+        return scale
+    raw = absmax / (data_max * tscale)
+    scale = formats.quantize_rtn(raw, spec.scale)
+    scale = jnp.where(scale > 0, scale, 1.0)
+    return scale
+
+
+def _tensor_scale(x_abs_max: jax.Array, spec: BlockQuantSpec) -> jax.Array:
+    """Power-of-two tensor scale mapping the largest block scale into range."""
+    if not spec.two_level:
+        return jnp.ones((), dtype=jnp.float32)
+    target = spec.data.max * spec.scale.max          # e.g. 6 * 448
+    raw = x_abs_max / target
+    # round *up* to a power of two so no block scale can clip (ldexp: exact)
+    _, k = jnp.frexp(raw.astype(jnp.float32))        # raw = m * 2^k, m in [.5,1)
+    ts = jnp.ldexp(jnp.ones((), jnp.float32), k)     # 2^ceil(log2 raw)
+    return jnp.where(x_abs_max > 0, ts, jnp.ones((), jnp.float32))
+
+
+def block_quantize(x: jax.Array, spec: BlockQuantSpec, *, axis: int = -1,
+                   key: Optional[jax.Array] = None,
+                   u: Optional[jax.Array] = None) -> QuantizedTensor:
+    """Quantize x to (codes, scales, tscale) per ``spec`` along ``axis``.
+
+    SR randomness: pass either ``key`` (threefry; statistics tests) or ``u``
+    — uniforms in [0,1) of x.shape, e.g. from ``formats.counter_bits``,
+    which XLA fuses into the quantize chain (the FQT hot path).
+    """
+    axis = _norm_axis(x.ndim, axis)
+    orig_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    xb = _blocked(xf, axis, spec.block)              # (..., nb, B, ...)
+    baxis = axis + 1                                 # the size-B axis
+    absmax = jnp.max(jnp.abs(xb), axis=baxis)        # (..., nb, ...)
+    tscale = _tensor_scale(jnp.max(jnp.abs(xf)), spec)
+    scales = _block_scales(absmax, spec, tscale)     # (..., nb, ...)
+    denom = jnp.expand_dims(scales, baxis) * tscale
+    if spec.stochastic and u is not None:
+        codes = formats.quantize_sr_with_u(
+            xb / denom, spec.data, _blocked(u.astype(jnp.float32), axis,
+                                            spec.block))
+    else:
+        codes = formats.quantize(xb / denom, spec.data,
+                                 stochastic=spec.stochastic, key=key)
+    codes = codes.reshape(x.shape).astype(orig_dtype)
+    return QuantizedTensor(codes=codes, scales=scales.astype(orig_dtype),
+                           tscale=tscale, axis=axis, block=spec.block)
+
+
+def fake_quant(x: jax.Array, spec: BlockQuantSpec, *, axis: int = -1,
+               key: Optional[jax.Array] = None,
+               u: Optional[jax.Array] = None) -> jax.Array:
+    """Quantize-dequantize in one step (the FQT simulation primitive)."""
+    return block_quantize(x, spec, axis=axis, key=key, u=u).dequant()
+
+
+# ---- packed storage (checkpoint / cache paths; not MXU operands) -------------
+
+
+def pack_e2m1(codes: jax.Array) -> jax.Array:
+    """Pack E2M1 grid values into nibbles, two per uint8 (last axis even)."""
+    import ml_dtypes  # noqa: F401  (registers float4_e2m1fn)
+    fp4 = codes.astype(jnp.float4_e2m1fn)
+    bits = jax.lax.bitcast_convert_type(fp4, jnp.uint4).astype(jnp.uint8)
+    lo, hi = bits[..., 0::2], bits[..., 1::2]
+    return lo | (hi << 4)
+
+
+def unpack_e2m1(packed: jax.Array, dtype=jnp.float32) -> jax.Array:
+    lo = (packed & 0xF).astype(jnp.uint4)
+    hi = (packed >> 4).astype(jnp.uint4)
+    stacked = jnp.stack([lo, hi], axis=-1)
+    flat = stacked.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+    fp4 = jax.lax.bitcast_convert_type(flat, jnp.float4_e2m1fn)
+    return fp4.astype(dtype)

@@ -1,0 +1,72 @@
+"""The paper's §4 gradient-to-noise monitor and √3 precision switch.
+
+Theory (paper App. B.1): with SR gradient quantization (noise std σ_q per
+coordinate), the expected loss decrease under the optimal step size stalls
+once
+
+    ‖∇L‖ / (σ_q · √d)  <  √3        (σ_critical = ‖∇L‖ / √(3d))
+
+The monitor estimates σ_q *from the actual quantized-vs-exact gradient
+residual* on a probe slice each step (no extra assumptions), tracks an EMA of
+the ratio, and recommends switching the backward/update GEMMs to higher
+precision (the QAF phase) when the EMA crosses √3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SQRT3 = 1.7320508075688772
+
+
+@dataclasses.dataclass(frozen=True)
+class ThresholdConfig:
+    ema: float = 0.9
+    threshold: float = SQRT3
+    min_steps: int = 10      # ignore the noisy first steps
+
+
+class ThresholdState(NamedTuple):
+    ratio_ema: jax.Array     # EMA of ||g|| / (sigma_q sqrt(d))
+    sigma_q: jax.Array       # last noise-std estimate
+    step: jax.Array
+    crossed: jax.Array       # bool: EMA below threshold (switch recommended)
+
+
+def init() -> ThresholdState:
+    return ThresholdState(jnp.asarray(1e9, jnp.float32),
+                          jnp.zeros((), jnp.float32),
+                          jnp.zeros((), jnp.int32),
+                          jnp.zeros((), bool))
+
+
+def estimate_sigma_q(exact: jax.Array, quantized: jax.Array) -> jax.Array:
+    """Per-coordinate quantization-noise std from a probe tensor."""
+    r = (quantized.astype(jnp.float32) - exact.astype(jnp.float32)).ravel()
+    return jnp.sqrt(jnp.mean(r * r) + 1e-30)
+
+
+def update(state: ThresholdState, grad_norm: jax.Array, n_params: int,
+           sigma_q: jax.Array, cfg: ThresholdConfig) -> ThresholdState:
+    """grad_norm: global ‖∇L‖ (fp32); n_params: d; sigma_q: probe estimate."""
+    ratio = grad_norm / (sigma_q * jnp.sqrt(jnp.asarray(n_params,
+                                                        jnp.float32)) + 1e-30)
+    first = state.step < 1
+    ema = jnp.where(first, ratio,
+                    cfg.ema * state.ratio_ema + (1 - cfg.ema) * ratio)
+    step = state.step + 1
+    crossed = (ema < cfg.threshold) & (step >= cfg.min_steps)
+    return ThresholdState(ema, sigma_q, step, crossed)
+
+
+def probe_sigma_from_grads(exact_grads, quant_grads) -> jax.Array:
+    """σ_q estimated over the concatenation of all gradient leaves."""
+    num, den = jnp.zeros(()), jnp.zeros(())
+    for e, q in zip(jax.tree.leaves(exact_grads), jax.tree.leaves(quant_grads)):
+        r = (q.astype(jnp.float32) - e.astype(jnp.float32)).ravel()
+        num += jnp.sum(r * r)
+        den += r.size
+    return jnp.sqrt(num / jnp.maximum(den, 1) + 1e-30)

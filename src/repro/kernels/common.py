@@ -1,0 +1,81 @@
+"""Arithmetic-only minifloat quantization helpers usable *inside* Pallas
+kernel bodies (no frexp, no exotic dtypes — just bitcasts, shifts, round,
+floor; all supported by Mosaic on TPU and by interpret mode on CPU).
+
+Bit-exact against repro.core.formats (tested in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FloatFormat
+
+
+class FmtParams(NamedTuple):
+    """Static per-format constants passed into kernels."""
+    man_bits: int
+    emin: int           # smallest normal exponent
+    emax: int           # largest normal exponent
+    max: float          # largest finite
+
+    @classmethod
+    def of(cls, fmt: FloatFormat) -> "FmtParams":
+        return cls(fmt.man_bits, fmt.emin, fmt.emax, fmt.max)
+
+
+def _ulp_from_bits(a: jax.Array, p: FmtParams) -> jax.Array:
+    """Grid spacing at |a| (a >= 0, float32), via exponent-field extraction.
+
+    ulp = 2^(clip(floor(log2 a), emin, emax) - man_bits); matches
+    formats._ulp bit-for-bit (incl. binade boundaries: 2^k has exponent k).
+    """
+    bits = jax.lax.bitcast_convert_type(a, jnp.uint32)
+    e = ((bits >> 23) & 0xFF).astype(jnp.int32) - 127   # floor(log2 a)
+    e = jnp.clip(e, p.emin, p.emax)
+    ulp_bits = ((e - p.man_bits + 127) << 23).astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(ulp_bits, jnp.float32)
+
+
+def quantize_rtn_k(x: jax.Array, p: FmtParams) -> jax.Array:
+    """Round-to-nearest-even onto the grid (float32 in/out), saturating."""
+    s = jnp.sign(x)
+    a = jnp.minimum(jnp.abs(x), p.max)
+    ulp = _ulp_from_bits(a, p)
+    q = jnp.round(a / ulp) * ulp
+    return s * jnp.minimum(q, p.max)
+
+
+def quantize_sr_k(x: jax.Array, p: FmtParams, u: jax.Array) -> jax.Array:
+    """Stochastic rounding with uniforms u in [0,1):  floor(|x|/ulp + u)*ulp."""
+    s = jnp.sign(x)
+    a = jnp.minimum(jnp.abs(x), p.max)
+    ulp = _ulp_from_bits(a, p)
+    q = jnp.floor(a / ulp + u) * ulp
+    return s * jnp.minimum(q, p.max)
+
+
+def uniform_from_bits_k(rbits: jax.Array) -> jax.Array:
+    """uint32 -> [0,1) float32; same convention as formats.uniform_from_bits."""
+    return (rbits >> 8).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+
+
+def e8m0_block_scale_k(absmax: jax.Array, data_emax: int) -> jax.Array:
+    """OCP MX rule: scale = 2^(floor(log2 amax) - emax_elem); 1.0 for amax=0."""
+    bits = jax.lax.bitcast_convert_type(absmax, jnp.uint32)
+    e = ((bits >> 23) & 0xFF).astype(jnp.int32) - 127
+    e = jnp.clip(e, -127, 127)
+    pbits = ((e + 127) << 23).astype(jnp.uint32)
+    p2 = jax.lax.bitcast_convert_type(pbits, jnp.float32)   # 2^floor(log2 amax)
+    scale = p2 / jnp.float32(2.0 ** data_emax)              # exact pow2 division
+    return jnp.where(absmax > 0, scale, 1.0)
+
+
+def generic_block_scale_k(absmax: jax.Array, data_max: float,
+                          scale_p: FmtParams, tscale: jax.Array) -> jax.Array:
+    """RtN block scale: Q_rtn(amax / (data_max * tscale)); 1.0 for zero."""
+    raw = absmax / (data_max * tscale)
+    scale = quantize_rtn_k(raw, scale_p)
+    return jnp.where(scale > 0, scale, 1.0)

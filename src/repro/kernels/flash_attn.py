@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: fused flash-attention forward (serving hot path).
+
+The §Perf loop showed the residual memory term of attention-heavy cells is
+the XLA-materialized f32 score chains (dot → where → exp → ... each a
+separate HBM round trip at 4 bytes/element).  This kernel keeps the whole
+(block_q × block_kv) score tile in VMEM/VREGs: one HBM read of q/k/v and
+one write of the output — the Blackwell-kernel dataflow mapped to the TPU
+memory hierarchy (HBM→VMEM tiles, MXU for qkᵀ and pv, VPU for the running
+softmax).
+
+Grid: (B, H, nq, nk) with the kv axis innermost; the output block
+(block_q, D) is revisited across kv steps, the running (m, l) statistics
+live in VMEM scratch.  GQA is folded into the k/v BlockSpec index maps
+(head h reads kv-head h // group).  Causal + sliding-window masks are
+applied from block-local iotas, and fully-masked kv blocks are skipped via
+``pl.when`` (the compute saving the XLA-level flash cannot express).
+
+Backward stays on the custom_vjp jnp path (models/layers.py) — training
+wants the FQT GEMM kernels' fusion budget; this kernel serves the
+prefill/decode forward.  Oracle: ``ref.flash_attention_ref`` (dense
+softmax); validated in interpret mode over shape/dtype/mask sweeps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_kv: int, causal: bool,
+                  window: Optional[int], seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute positions of this tile's rows/cols
+    q0 = qi * block_q
+    k0 = ki * block_kv
+    qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+
+    # skip fully-masked kv blocks (beyond causal frontier / before window)
+    run = True
+    if causal:
+        run = jnp.asarray(k0 <= q0 + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(
+            run, jnp.asarray(k0 + block_kv - 1 > q0 - window))
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)       # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)         # (bq, bk)
+        s = s * (q.shape[-1] ** -0.5)
+        mask = kpos < seq_k                             # pad guard
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype).astype(jnp.float32), v,
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom[:, None]
+                             ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_kv",
+                              "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """Fused attention forward.  q: (B, Sq, H, D); k/v: (B, Sk, KVH, D).
+
+    H must be a multiple of KVH (GQA); Sq/Sk must divide by the block
+    sizes (configs are powers of two; callers pad otherwise).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KVH, _ = k.shape
+    if H % KVH:
+        raise ValueError(f"GQA: H={H} not a multiple of KVH={KVH}")
+    G = H // KVH
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Sk)
+    if Sq % bq or Sk % bkv:
+        raise ValueError(f"seq ({Sq},{Sk}) not divisible by blocks "
+                         f"({bq},{bkv})")
+    grid = (B, H, Sq // bq, Sk // bkv)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=bq, block_kv=bkv, causal=causal,
+        window=window, seq_k=Sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bkv, 1, D),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bkv, 1, D),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # m: running row max
+            pltpu.VMEM((bq,), jnp.float32),       # l: running denominator
+            pltpu.VMEM((bq, D), jnp.float32),     # acc: fp32 output tile
+        ],
+        interpret=interpret,
+    )(q, k, v)

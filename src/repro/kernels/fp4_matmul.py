@@ -1,0 +1,220 @@
+"""Pallas TPU kernels: block-scaled FP4 matmul (unfused and fused-quant).
+
+TPU-native adaptation of Blackwell's block-scaled FP4 MMA (DESIGN.md §3):
+
+  * ``block_matmul``: consumes pre-quantized (codes, scales) operands; each
+    grid step loads (TM,TK)/(TK,TN) tiles into VMEM, dequantizes in VREGs
+    (codes * broadcast(scales) — exact in bf16), and feeds the MXU with an
+    fp32-accumulating dot.  Accumulation runs over the innermost K grid axis
+    into the output tile (revisited, standard Pallas matmul pattern).
+
+  * ``fused_quant_matmul``: additionally quantizes *raw* bf16/f32 operand
+    tiles on the fly (amax -> scale -> codes in VREGs, RtN or SR with
+    explicit random bits), so quantization costs zero extra HBM traffic.
+    This is the kernel the FQT layer uses for all three training GEMMs
+    (operands pre-transposed so blocks always lie along the contraction
+    axis: A (M,K) blocked along K/axis-1, B (K,N) blocked along K/axis-0).
+
+Tile defaults (TM,TN,TK)=(128,128,512): MXU-aligned (128 lanes), VMEM use
+~1.2 MB for the fused kernel at fp32 — comfortably within the ~16 MB/core
+budget while leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quantize import BlockQuantSpec
+from repro.kernels import common as c
+from repro.kernels.nvfp4_quant import _pick_tile
+
+
+# ---- unfused: pre-quantized operands ----------------------------------------
+
+
+def _block_matmul_kernel(ac_ref, as_ref, bc_ref, bs_ref, o_ref, *, block: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ac = ac_ref[...].astype(jnp.float32)          # (TM, TK)
+    bc = bc_ref[...].astype(jnp.float32)          # (TK, TN)
+    asc = as_ref[...]                             # (TM, TK//B)
+    bsc = bs_ref[...]                              # (TK//B, TN)
+    tm, tk = ac.shape
+    tn = bc.shape[1]
+    nb = tk // block
+    ad = (ac.reshape(tm, nb, block) * asc[:, :, None]).reshape(tm, tk)
+    bd = (bc.reshape(nb, block, tn) * bsc[:, None, :]).reshape(tk, tn)
+    o_ref[...] += jnp.dot(ad, bd, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "interpret", "tm", "tn", "tk"))
+def block_matmul(a_codes, a_scales, b_codes, b_scales, tscale, *,
+                 block: int = 16, interpret: bool = False,
+                 tm: int = 128, tn: int = 128, tk: int = 512) -> jax.Array:
+    """(M,K) @ (K,N) with per-block scales; returns fp32 (M,N) * tscale."""
+    M, K = a_codes.shape
+    K2, N = b_codes.shape
+    assert K == K2, (a_codes.shape, b_codes.shape)
+    TM, TN = _pick_tile(M, tm), _pick_tile(N, tn)
+    TK = _pick_tile(K, tk, block)
+    grid = (M // TM, N // TN, K // TK)
+
+    out = pl.pallas_call(
+        functools.partial(_block_matmul_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, TK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((TM, TK // block), lambda i, j, k: (i, k)),
+            pl.BlockSpec((TK, TN), lambda i, j, k: (k, j)),
+            pl.BlockSpec((TK // block, TN), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(a_codes, a_scales, b_codes, b_scales)
+    return out * tscale
+
+
+# ---- fused: quantize raw tiles on the fly, then MMA -------------------------
+
+
+def _quant_tile_along_last(x, rb, tscale, *, block, data_p, scale_p,
+                           scale_is_e8m0, stochastic):
+    """Quantize (R, C) tile with blocks along C; returns dequantized tile
+    (codes*scales, tscale NOT applied — folded into the output epilogue)."""
+    r, ccols = x.shape
+    nb = ccols // block
+    xb = x.reshape(r, nb, block)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    if scale_is_e8m0:
+        scales = c.e8m0_block_scale_k(absmax, data_p.emax)
+    else:
+        scales = c.generic_block_scale_k(absmax, data_p.max, scale_p, tscale)
+    scaled = xb / (scales[:, :, None] * tscale)
+    if stochastic:
+        u = c.uniform_from_bits_k(rb).reshape(r, nb, block)
+        codes = c.quantize_sr_k(scaled, data_p, u)
+    else:
+        codes = c.quantize_rtn_k(scaled, data_p)
+    return (codes * scales[:, :, None]).reshape(r, ccols)
+
+
+def _quant_tile_along_first(x, rb, tscale, *, block, data_p, scale_p,
+                            scale_is_e8m0, stochastic):
+    """Quantize (R, C) tile with blocks along R (no VREG transposes)."""
+    r, ccols = x.shape
+    nb = r // block
+    xb = x.reshape(nb, block, ccols)
+    absmax = jnp.max(jnp.abs(xb), axis=1)                 # (nb, C)
+    if scale_is_e8m0:
+        scales = c.e8m0_block_scale_k(absmax, data_p.emax)
+    else:
+        scales = c.generic_block_scale_k(absmax, data_p.max, scale_p, tscale)
+    scaled = xb / (scales[:, None, :] * tscale)
+    if stochastic:
+        u = c.uniform_from_bits_k(rb).reshape(nb, block, ccols)
+        codes = c.quantize_sr_k(scaled, data_p, u)
+    else:
+        codes = c.quantize_rtn_k(scaled, data_p)
+    return (codes * scales[:, None, :]).reshape(r, ccols)
+
+
+def _fused_kernel(a_ref, b_ref, arb_ref, brb_ref, tsa_ref, tsb_ref, o_ref, *,
+                  block: int, data_p, scale_p, scale_is_e8m0,
+                  sr_a: bool, sr_b: bool, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tsa = tsa_ref[0, 0]
+    tsb = tsb_ref[0, 0]
+    a = a_ref[...].astype(jnp.float32)            # (TM, TK) blocked along TK
+    b = b_ref[...].astype(jnp.float32)            # (TK, TN) blocked along TK
+    ad = _quant_tile_along_last(
+        a, arb_ref[...], tsa, block=block, data_p=data_p, scale_p=scale_p,
+        scale_is_e8m0=scale_is_e8m0, stochastic=sr_a)
+    bd = _quant_tile_along_first(
+        b, brb_ref[...], tsb, block=block, data_p=data_p, scale_p=scale_p,
+        scale_is_e8m0=scale_is_e8m0, stochastic=sr_b)
+    o_ref[...] += jnp.dot(ad, bd, preferred_element_type=jnp.float32) \
+        * (tsa * tsb)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "spec_a", "spec_b", "interpret", "tm", "tn", "tk", "out_dtype"))
+def fused_quant_matmul(a: jax.Array, b: jax.Array,
+                       spec_a: BlockQuantSpec, spec_b: BlockQuantSpec, *,
+                       a_rbits: Optional[jax.Array] = None,
+                       b_rbits: Optional[jax.Array] = None,
+                       out_dtype=jnp.float32, interpret: bool = False,
+                       tm: int = 128, tn: int = 128,
+                       tk: int = 512) -> jax.Array:
+    """Quantize-a (blocks along axis1) x quantize-b (blocks along axis0) GEMM.
+
+    The FQT hot path: one pallas_call per training GEMM, quantization fused.
+    """
+    if spec_a.block != spec_b.block:
+        raise ValueError("operand block sizes must match")
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    B = spec_a.block
+    if K % B:
+        raise ValueError(f"K={K} not divisible by block={B}")
+
+    from repro.kernels.ref import tensor_scale_ref
+    tsa = tensor_scale_ref(a, spec_a).reshape(1, 1)
+    tsb = tensor_scale_ref(b, spec_b).reshape(1, 1)
+
+    dummy = jnp.zeros((1, 1), jnp.uint32)
+    if not spec_a.stochastic:
+        a_rbits = dummy
+    if not spec_b.stochastic:
+        b_rbits = dummy
+    if spec_a.stochastic and (a_rbits is None or a_rbits.shape != a.shape):
+        raise ValueError("spec_a stochastic requires a_rbits of a.shape")
+    if spec_b.stochastic and (b_rbits is None or b_rbits.shape != b.shape):
+        raise ValueError("spec_b stochastic requires b_rbits of b.shape")
+
+    TM, TN = _pick_tile(M, tm), _pick_tile(N, tn)
+    TK = _pick_tile(K, tk, B)
+    grid = (M // TM, N // TN, K // TK)
+
+    def _rb_spec(stoch, shape_map):
+        if stoch:
+            return pl.BlockSpec(*shape_map)
+        return pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))
+
+    kernel = functools.partial(
+        _fused_kernel, block=B, data_p=c.FmtParams.of(spec_a.data),
+        scale_p=c.FmtParams.of(spec_a.scale),
+        scale_is_e8m0=(spec_a.scale_fmt == "e8m0"),
+        sr_a=spec_a.stochastic, sr_b=spec_b.stochastic, out_dtype=out_dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, TK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((TK, TN), lambda i, j, k: (k, j)),
+            _rb_spec(spec_a.stochastic, ((TM, TK), lambda i, j, k: (i, k))),
+            _rb_spec(spec_b.stochastic, ((TK, TN), lambda i, j, k: (k, j))),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(a, b, a_rbits, b_rbits, tsa, tsb)
+    return out.astype(out_dtype)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: fused NVFP4/MXFP4 block quantization.
+
+One pass over the tensor: per 16-element block (along the last axis) compute
+amax -> quantized shared scale (E4M3 RtN or E8M0 floor) -> E2M1 codes
+(RtN or SR with explicit random bits).  HBM -> VMEM tiles via BlockSpec; the
+MXU is not involved (pure VPU work), so tiles are sized for VMEM residency
+and lane alignment (last dim multiples of 128, sublane multiples of 8).
+
+On Blackwell this step is fused into the tensor-core data path; on TPU we
+expose it standalone (for cache/checkpoint packing and for the unfused
+matmul) and fused into the GEMM kernel (fp4_matmul.py) for the hot path —
+see DESIGN.md §3 (hardware adaptation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quantize import BlockQuantSpec
+from repro.kernels import common as c
+
+
+def _quant_kernel(x_ref, rbits_ref, ts_ref, codes_ref, scales_ref, *,
+                  block: int, data_p: c.FmtParams, scale_p: c.FmtParams,
+                  scale_is_e8m0: bool, stochastic: bool):
+    x = x_ref[...].astype(jnp.float32)                    # (TM, TK)
+    tm, tk = x.shape
+    nb = tk // block
+    xb = x.reshape(tm, nb, block)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)                # (TM, nb)
+    tscale = ts_ref[0, 0]
+    if scale_is_e8m0:
+        scales = c.e8m0_block_scale_k(absmax, data_p.emax)
+    else:
+        scales = c.generic_block_scale_k(absmax, data_p.max, scale_p, tscale)
+    scaled = xb / (scales[:, :, None] * tscale)
+    if stochastic:
+        u = c.uniform_from_bits_k(rbits_ref[...]).reshape(tm, nb, block)
+        codes = c.quantize_sr_k(scaled, data_p, u)
+    else:
+        codes = c.quantize_rtn_k(scaled, data_p)
+    codes_ref[...] = codes.reshape(tm, tk).astype(codes_ref.dtype)
+    scales_ref[...] = scales.astype(scales_ref.dtype)
+
+
+def _pick_tile(dim: int, pref: int, multiple: int = 1) -> int:
+    """Largest divisor of dim that is <= pref and a multiple of `multiple`."""
+    t = min(pref, dim)
+    t -= t % multiple
+    while t > multiple and dim % t != 0:
+        t -= multiple
+    if t <= 0 or dim % t != 0:
+        t = dim
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def block_quantize_pallas(
+        x: jax.Array, spec: BlockQuantSpec, *,
+        rbits: Optional[jax.Array] = None,
+        tscale: Optional[jax.Array] = None,
+        interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a 2D array along its last axis.  Returns (codes, scales).
+
+    codes: x.shape, values on the E2M1 grid (times 1.0); scales:
+    (M, K/block) float32.  Multiply codes*repeat(scales)*tscale to dequant.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected 2D input, got {x.shape}")
+    M, K = x.shape
+    B = spec.block
+    if K % B:
+        raise ValueError(f"K={K} not divisible by block={B}")
+    if tscale is None:
+        from repro.kernels.ref import tensor_scale_ref
+        tscale = tensor_scale_ref(x, spec)
+    tscale = jnp.asarray(tscale, jnp.float32).reshape(1, 1)
+    if rbits is None:
+        rbits = jnp.zeros((1, 1), jnp.uint32) if not spec.stochastic else None
+    if spec.stochastic and (rbits is None or rbits.shape != x.shape):
+        raise ValueError("SR requires rbits with the same shape as x")
+
+    TM = _pick_tile(M, 256, 8 if M % 8 == 0 else 1)
+    TK = _pick_tile(K, 2048, B)
+    grid = (M // TM, K // TK)
+
+    kernel = functools.partial(
+        _quant_kernel, block=B,
+        data_p=c.FmtParams.of(spec.data), scale_p=c.FmtParams.of(spec.scale),
+        scale_is_e8m0=(spec.scale_fmt == "e8m0"), stochastic=spec.stochastic)
+
+    rb_spec = (pl.BlockSpec((TM, TK), lambda i, j: (i, j))
+               if spec.stochastic else pl.BlockSpec((1, 1), lambda i, j: (0, 0)))
+    if not spec.stochastic:
+        rbits = jnp.zeros((1, 1), jnp.uint32)
+
+    codes, scales = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, TK), lambda i, j: (i, j)),
+            rb_spec,
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TM, TK), lambda i, j: (i, j)),
+            pl.BlockSpec((TM, TK // B), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), x.dtype),
+            jax.ShapeDtypeStruct((M, K // B), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, rbits, tscale)
+    return codes, scales

@@ -1,0 +1,52 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` mode is selected automatically: on the CPU backend the kernels
+execute their bodies in interpret mode (bit-exact semantics, used by tests
+and this container); on TPU they compile via Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import BlockQuantSpec
+from repro.kernels import fp4_matmul as _mm
+from repro.kernels import nvfp4_quant as _q
+
+
+@functools.lru_cache(maxsize=None)
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def block_quantize(x: jax.Array, spec: BlockQuantSpec, *,
+                   rbits: Optional[jax.Array] = None,
+                   interpret: Optional[bool] = None):
+    """Standalone fused block-quantization kernel; returns (codes, scales)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _q.block_quantize_pallas(x, spec, rbits=rbits, interpret=interpret)
+
+
+def block_matmul(a_codes, a_scales, b_codes, b_scales, tscale, *,
+                 block: int = 16, interpret: Optional[bool] = None):
+    """Block-scaled matmul on pre-quantized operands."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _mm.block_matmul(a_codes, a_scales, b_codes, b_scales, tscale,
+                            block=block, interpret=interpret)
+
+
+def fused_quant_matmul(a, b, spec_a: BlockQuantSpec, spec_b: BlockQuantSpec, *,
+                       a_rbits=None, b_rbits=None, out_dtype=jnp.float32,
+                       interpret: Optional[bool] = None,
+                       tm: int = 128, tn: int = 128, tk: int = 512):
+    """The FQT hot path: quantize both operands on the fly + block-scaled MMA."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _mm.fused_quant_matmul(a, b, spec_a, spec_b, a_rbits=a_rbits,
+                                  b_rbits=b_rbits, out_dtype=out_dtype,
+                                  interpret=interpret, tm=tm, tn=tn, tk=tk)

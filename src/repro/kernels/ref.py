@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These mirror the kernels' semantics *exactly* (same scale rules, same
+uniform-bits convention for SR), so kernel tests can assert bit-equality in
+interpret mode.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats
+from repro.core.quantize import BlockQuantSpec, _tensor_scale
+
+
+def tensor_scale_ref(x: jax.Array, spec: BlockQuantSpec) -> jax.Array:
+    """Per-tensor pow2 scale (computed outside the kernels; cheap reduction)."""
+    return _tensor_scale(jnp.max(jnp.abs(x.astype(jnp.float32))), spec)
+
+
+def block_quant_ref(x: jax.Array, spec: BlockQuantSpec, *,
+                    rbits: Optional[jax.Array] = None,
+                    tscale: Optional[jax.Array] = None,
+                    axis: int = -1) -> Tuple[jax.Array, jax.Array]:
+    """Block quantization along ``axis``; returns (codes, scales).
+
+    ``codes`` are dequantized-grid values (code * 1.0), i.e. E2M1 grid points;
+    reconstruct with codes * repeat(scales, B, axis) * tscale.
+    """
+    axis = axis % x.ndim
+    B = spec.block
+    xf = x.astype(jnp.float32)
+    if tscale is None:
+        tscale = tensor_scale_ref(x, spec)
+    shp = xf.shape
+    nb = shp[axis] // B
+    xb = jnp.moveaxis(xf, axis, -1).reshape(-1, nb, B)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)                      # (R, nb)
+    if spec.scale_fmt == "e8m0":
+        scales = formats.e8m0_floor(absmax) / (2.0 ** spec.data.emax)
+        scales = jnp.where(absmax > 0, scales, 1.0)
+    else:
+        raw = absmax / (spec.data.max * tscale)
+        scales = formats.quantize_rtn(raw, spec.scale)
+        scales = jnp.where(scales > 0, scales, 1.0)
+    scaled = xb / (scales[..., None] * tscale)
+    if spec.stochastic:
+        if rbits is None:
+            raise ValueError("SR requires rbits")
+        rb = jnp.moveaxis(rbits, axis, -1).reshape(-1, nb, B)
+        u = formats.uniform_from_bits(rb)
+        codes = formats.quantize_sr_with_u(scaled, spec.data, u)
+    else:
+        codes = formats.quantize_rtn(scaled, spec.data)
+    # restore layouts
+    def _restore(a, last):
+        a = a.reshape(tuple(jnp.moveaxis(xf, axis, -1).shape[:-1]) + (last,))
+        return jnp.moveaxis(a, -1, axis)
+    codes = _restore(codes.reshape(-1, nb * B), nb * B).astype(x.dtype)
+    scales = _restore(scales, nb).astype(jnp.float32)
+    return codes, scales
+
+
+def block_matmul_ref(a_codes: jax.Array, a_scales: jax.Array,
+                     b_codes: jax.Array, b_scales: jax.Array,
+                     tscale: jax.Array, block: int,
+                     out_dtype=jnp.float32) -> jax.Array:
+    """(M,K) x (K,N) block-scaled matmul, fp32 accumulation.
+
+    a blocked along K (axis 1, scales (M, K/B)); b blocked along K (axis 0,
+    scales (K/B, N)); ``tscale`` = tscale_a * tscale_b applied at the end.
+    """
+    ad = a_codes.astype(jnp.float32) * jnp.repeat(a_scales, block, axis=1)
+    bd = b_codes.astype(jnp.float32) * jnp.repeat(b_scales, block, axis=0)
+    out = jnp.matmul(ad, bd, preferred_element_type=jnp.float32) * tscale
+    return out.astype(out_dtype)
+
+
+def fused_quant_matmul_ref(a: jax.Array, b: jax.Array, spec_a: BlockQuantSpec,
+                           spec_b: BlockQuantSpec, *,
+                           a_rbits: Optional[jax.Array] = None,
+                           b_rbits: Optional[jax.Array] = None,
+                           out_dtype=jnp.float32) -> jax.Array:
+    """Quantize a along axis 1 and b along axis 0, then block-scaled matmul."""
+    tsa = tensor_scale_ref(a, spec_a)
+    tsb = tensor_scale_ref(b, spec_b)
+    ac, asc = block_quant_ref(a, spec_a, rbits=a_rbits, tscale=tsa, axis=1)
+    bc, bsc = block_quant_ref(b, spec_b, rbits=b_rbits, tscale=tsb, axis=0)
+    return block_matmul_ref(ac, asc, bc, bsc, tsa * tsb, spec_a.block,
+                            out_dtype)

@@ -1,0 +1,159 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(**abstract_inputs).compile()`` must succeed
+on the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh for every
+assigned architecture × input shape.  ``memory_analysis()`` proves the
+sharded program fits; ``cost_analysis()`` + the optimized HLO feed the
+§Roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+  python -m repro.launch.dryrun ... --out results/dryrun     # JSON per cell
+
+(The XLA_FLAGS line above MUST precede any jax import: jax locks the device
+count on first init.  Only this entry point forces 512 host devices —
+tests/benches see the real single CPU device.)
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import fqt
+from repro.launch import roofline as rl
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import describe, make_production_mesh
+from repro.models.config import SHAPES, SHAPES_BY_NAME
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             qcfg_name: str = "nvfp4", act_mode: str | None = "sp",
+             cfg_overrides: dict | None = None,
+             verbose: bool = True, extra: dict | None = None) -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+           "qcfg": qcfg_name, "kind": shape.kind, "act_mode": act_mode}
+
+    reason = specs_mod.skip_reason(cfg, shape)
+    if reason:
+        rec.update(status="skip", reason=reason)
+        return rec
+
+    qcfg = {
+        "nvfp4": fqt.nvfp4_paper_config,
+        "bf16": fqt.bf16_config,
+        "qaf": fqt.qaf_config,
+        "mxfp4": fqt.mxfp4_config,
+    }[qcfg_name]()
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        cell = specs_mod.build_cell(cfg, shape, mesh, qcfg=qcfg)
+        cell.act_mode = act_mode
+        lowered = specs_mod.lower_cell(cell, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    except Exception as e:                                    # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        return rec
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    mf = rl.model_flops(cfg, specs_mod.params_struct(cfg), shape)
+    roof = rl.from_compiled(compiled, hlo, chips, model_flops=mf)
+    from repro.launch import hlo_cost
+    hcost = hlo_cost.analyze(hlo)
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, list):
+        xla_cost = xla_cost[0]
+
+    rec.update(
+        status="ok", mesh=describe(mesh), chips=chips,
+        t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1),
+        bytes_per_device={
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "peak": (getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        roofline=roof.as_dict(),
+        collectives={k: v for k, v in hcost.coll.items() if v},
+        eltflops=hcost.eltflops,
+        xla_cost_once={"flops": float(xla_cost.get("flops", 0)),
+                       "bytes": float(xla_cost.get("bytes accessed", 0))},
+    )
+    if extra:
+        rec.update(extra)
+    if verbose:
+        print(f"[{arch} × {shape_name} × {describe(mesh)}] "
+              f"compile {t_compile:.0f}s  "
+              f"compute {roof.t_compute*1e3:.2f}ms  "
+              f"memory {roof.t_memory*1e3:.2f}ms  "
+              f"collective {roof.t_collective*1e3:.2f}ms  "
+              f"-> {roof.bottleneck}-bound; "
+              f"useful {100*(roof.useful_fraction or 0):.0f}%  "
+              f"temp/dev {(rec['bytes_per_device']['temp'] or 0)/2**30:.2f}GiB")
+        sys.stdout.flush()
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--qcfg", default="nvfp4",
+                    choices=["nvfp4", "bf16", "qaf", "mxfp4"])
+    ap.add_argument("--act-mode", default="sp",
+                    choices=["sp", "replicated", "off"],
+                    help="activation-constraint mode (§Perf ablation)")
+    ap.add_argument("--out", default=None, help="directory for JSON records")
+    args = ap.parse_args(argv)
+    act_mode = None if args.act_mode == "off" else args.act_mode
+
+    archs = [a for a in ARCH_IDS if not a.startswith("llama2")] \
+        if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" \
+        else [args.shape]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           qcfg_name=args.qcfg, act_mode=act_mode)
+            if rec["status"] == "error":
+                failures += 1
+                print(f"[{arch} × {shape}] FAILED: {rec['error']}")
+            elif rec["status"] == "skip":
+                print(f"[{arch} × {shape}] SKIP: {rec['reason']}")
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                pod = "2pod" if args.multi_pod else "1pod"
+                path = os.path.join(
+                    args.out,
+                    f"{rec['arch']}__{rec['shape']}__{pod}__{args.qcfg}.json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

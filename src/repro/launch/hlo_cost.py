@@ -1,0 +1,344 @@
+"""Trip-count-aware cost analysis of optimized HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts every computation ONCE —
+a ``lax.scan`` over 126 layers reports the FLOPs/bytes/collectives of a
+single layer (measured on this build; see DESIGN.md §Roofline-method).  All
+our models scan their layer stacks, so the built-in numbers undercount by
+the trip count.  This module re-derives program cost from the optimized HLO
+text, multiplying ``while`` bodies by their ``known_trip_count`` —
+the roofline inputs then reflect what a device actually executes per step.
+
+Counting model (per executed top-level op):
+  * flops — MXU work: ``dot`` = 2 × prod(result) × prod(contracted dims)
+    (batch dims handled; only dots/convolutions counted — elementwise VPU
+    work is reported separately as ``eltflops`` for the quantize-overhead
+    analysis).
+  * bytes — HBM traffic under perfect fusion: Σ operand sizes + result
+    size for every materializing op (fusion, dot, copy, slice, sort, ...);
+    bookkeeping ops (tuple/gte/parameter/bitcast/constant) are free.
+    Slicing reads (slice/dynamic-slice/gather — e.g. the per-layer weight
+    slice inside a scanned stack) count the *sliced* size, not the full
+    operand: a fusion operand that the fused computation only touches
+    through slice/gather ops contributes the slice result size.
+  * collective_bytes — result-shape bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (by kind).
+
+The entry computation is walked with memoized recursion: ``while`` bodies
+and conditions multiply by trip count, ``conditional`` takes the max branch,
+fusions contribute their own operands/result only (their callees are
+element-wise internals).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5, "s8": 1,
+    "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "f8e8m0fnu": 1, "f4e2m1fn": 0.5, "c64": 8,
+    "c128": 16, "token": 0, "s1": 0.125, "u1": 0.125,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops that do not touch memory / are pure bookkeeping
+_FREE_OPS = frozenset({
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "domain",
+    "opt-barrier", "while", "conditional", "call",
+})
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*"              # result name
+    r"((?:\([^)]*\))|(?:[a-z][a-z0-9]*\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"([a-z0-9_$.-]+)"                                 # op name
+    r"\(([^)]*)\)")                                    # operand list
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%([^\s,)]+)")
+_COND_BODY_RE = re.compile(r"condition=%([^\s,)]+),\s*body=%([^\s,)]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([^\s,()]+)")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        bpe = _DTYPE_BYTES.get(dt)
+        if bpe is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * bpe
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def _shape_elems(type_str: str) -> float:
+    n = 1
+    for d in _shape_dims(type_str):
+        n *= d
+    return float(n)
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0         # MXU (dot/conv) flops
+    eltflops: float = 0.0      # everything-else proxy (fusion result elems)
+    bytes: float = 0.0         # HBM traffic upper bound (as-compiled fusion)
+    bytes_min: float = 0.0     # lower bound: perfect fusion (dot/coll/DUS)
+    coll: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {k: 0.0 for k in _COLLECTIVES}
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.eltflops += other.eltflops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_min += other.bytes_min * mult
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def _split_computations(text: str) -> Dict[str, Tuple[List[str], bool]]:
+    """name -> (body lines, is_entry)."""
+    comps: Dict[str, Tuple[List[str], bool]] = {}
+    cur, cur_name, is_entry = None, None, False
+    for line in text.splitlines():
+        if not line.startswith(" ") and "{" in line and ("->" in line):
+            m = re.match(r"\s*(ENTRY\s+)?%?([^\s(]+)\s*\(", line)
+            if m:
+                cur_name = m.group(2)
+                is_entry = bool(m.group(1))
+                cur = []
+                comps[cur_name] = (cur, is_entry)
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            cur.append(line)
+    return comps
+
+
+def _dot_flops(op: _Op, shapes: Dict[str, str]) -> float:
+    result = _shape_elems(op.type_str)
+    m = _CONTRACT_RE.search(op.line)
+    contracted = 1.0
+    if m and op.operands:
+        lhs_dims = _shape_dims(shapes.get(op.operands[0], ""))
+        if m.group(1):
+            for idx in m.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contracted *= lhs_dims[i]
+    return 2.0 * result * contracted
+
+
+def top_ops(text: str, kinds=("all-gather", "all-reduce", "reduce-scatter",
+                              "all-to-all", "collective-permute", "dot",
+                              "fusion", "copy"), k: int = 25):
+    """Rank ops by bytes × execution count (diagnostics for §Perf).
+
+    Returns [(total_bytes, count, kind, result_type, metadata_op_name)].
+    """
+    comps = _split_computations(text)
+    entry = next((n for n, (_, e) in comps.items() if e), None)
+    # execution multiplier per computation, via the same while-walk
+    mult: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    while order:
+        cname = order.pop()
+        m = mult.get(cname, 1.0)
+        for line in comps.get(cname, ([], False))[0]:
+            wm = _COND_BODY_RE.search(line)
+            if wm and "while(" in line:
+                trip = 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                for sub in (wm.group(1), wm.group(2)):
+                    mult[sub] = mult.get(sub, 0.0) + m * trip
+                    order.append(sub)
+            cm = re.search(r"to_apply=%([^\s,)]+)", line)
+            if cm and re.search(r"\bcall\(", line):
+                mult[cm.group(1)] = mult.get(cm.group(1), 0.0) + m
+                order.append(cm.group(1))
+    rows = []
+    for cname, (lines, _) in comps.items():
+        m = mult.get(cname)
+        if not m:
+            continue
+        for line in lines:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            kind = om.group(3)
+            base = kind[:-6] if kind.endswith("-start") else kind
+            if base not in kinds or kind.endswith("-done"):
+                continue
+            nb = _shape_bytes(om.group(2)) * m
+            meta = re.search(r'op_name="([^"]*)"', line)
+            rows.append((nb, m, base, om.group(2)[:60],
+                         (meta.group(1) if meta else "")[:110]))
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def analyze(text: str) -> Cost:
+    comps = _split_computations(text)
+    entry = next((n for n, (_, e) in comps.items() if e), None)
+    if entry is None:
+        return Cost()
+
+    # first pass per computation: symbol table + op list
+    parsed: Dict[str, List[_Op]] = {}
+    shapes_by_comp: Dict[str, Dict[str, str]] = {}
+    for name, (lines, _) in comps.items():
+        ops, shapes = [], {}
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            opn = _Op(m.group(1), m.group(2), m.group(3),
+                      _OPERAND_RE.findall(m.group(4)), line)
+            ops.append(opn)
+            shapes[opn.name] = opn.type_str
+        parsed[name] = ops
+        shapes_by_comp[name] = shapes
+
+    _SLICE_OPS = ("dynamic-slice", "slice", "gather")
+
+    def _sliced_params(cname: str) -> Dict[int, float]:
+        """For a fused computation: parameter index -> sliced-read bytes,
+        for parameters accessed ONLY via slice/dynamic-slice/gather."""
+        ops = parsed.get(cname, [])
+        param_idx: Dict[str, int] = {}
+        uses: Dict[str, List[_Op]] = {}
+        for op in ops:
+            if op.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", op.line)
+                if m:
+                    param_idx[op.name] = int(m.group(1))
+            for o in op.operands:
+                uses.setdefault(o, []).append(op)
+        out: Dict[int, float] = {}
+        for pname, idx in param_idx.items():
+            consumers = uses.get(pname, [])
+            if consumers and all(
+                    c.op in _SLICE_OPS and c.operands
+                    and c.operands[0] == pname for c in consumers):
+                out[idx] = max(_shape_bytes(c.type_str) for c in consumers)
+        return out
+
+    memo: Dict[str, Cost] = {}
+
+    def comp_cost(cname: str, stack=()) -> Cost:
+        if cname in memo:
+            return memo[cname]
+        if cname in stack or cname not in parsed:
+            return Cost()
+        total = Cost()
+        shapes = shapes_by_comp[cname]
+        for op in parsed[cname]:
+            kind = op.op
+            if kind == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trip = int(tm.group(1))
+                cb = _COND_BODY_RE.search(op.line)
+                if cb:
+                    total.add(comp_cost(cb.group(2), stack + (cname,)), trip)
+                    total.add(comp_cost(cb.group(1), stack + (cname,)), trip)
+                continue
+            if kind == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                      op.line) or \
+                    re.findall(r"(?:true|false)_computation=%([^\s,)]+)",
+                               op.line)
+                names = []
+                for b in branches:
+                    names += [x.strip().lstrip("%") for x in b.split(",")]
+                if names:
+                    costs = [comp_cost(n, stack + (cname,)) for n in names]
+                    best = max(costs, key=lambda c: (c.flops, c.bytes))
+                    total.add(best)
+                continue
+            if kind == "call":
+                cm = re.search(r"to_apply=%([^\s,)]+)", op.line)
+                if cm:
+                    total.add(comp_cost(cm.group(1), stack + (cname,)))
+                continue
+            # collectives
+            base = kind[:-6] if kind.endswith("-start") else kind
+            if base in _COLLECTIVES:
+                if not kind.endswith("-done"):
+                    total.coll[base] += _shape_bytes(op.type_str)
+                    total.bytes += _shape_bytes(op.type_str)
+                    total.bytes_min += _shape_bytes(op.type_str)
+                continue
+            if kind.endswith("-done"):
+                continue
+            if kind in _FREE_OPS:
+                continue
+            # memory traffic: operands + result (slice-aware)
+            nbytes = _shape_bytes(op.type_str)
+            if kind in _SLICE_OPS:
+                # read the sliced region, not the source buffer
+                nbytes += _shape_bytes(op.type_str)
+                for o in op.operands[1:]:
+                    nbytes += _shape_bytes(shapes.get(o, ""))
+            elif kind == "dynamic-update-slice" and len(op.operands) >= 2:
+                upd = _shape_bytes(shapes.get(op.operands[1], ""))
+                nbytes = 2 * upd       # read+write the updated region
+            else:
+                sliced = {}
+                if kind == "fusion":
+                    cm = _CALLS_RE.search(op.line)
+                    if cm:
+                        sliced = _sliced_params(cm.group(1))
+                for i, o in enumerate(op.operands):
+                    nbytes += sliced.get(i, _shape_bytes(shapes.get(o, "")))
+            total.bytes += nbytes
+            if kind in ("dot", "convolution", "dynamic-update-slice",
+                        "scatter", "sort"):
+                total.bytes_min += nbytes
+            if kind == "dot":
+                total.flops += _dot_flops(op, shapes)
+            elif kind == "convolution":
+                # rough: 2 × result × (kernel elems) — fine, convs are rare
+                total.flops += 2.0 * _shape_elems(op.type_str)
+            else:
+                total.eltflops += _shape_elems(op.type_str)
+        memo[cname] = total
+        return total
+
+    return comp_cost(entry)

@@ -1,0 +1,29 @@
+"""Production meshes.
+
+A TPU v5e pod is 16×16 = 256 chips; the production job is 2 pods = 512.
+Axes: "data" carries DP+FSDP, "model" carries TP(+SP); the optional outer
+"pod" axis is pure DP whose gradient all-reduce crosses the inter-pod links
+(and is where distributed/compression.py applies).
+
+``make_production_mesh`` is a *function* so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first use).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has (tests / examples): (1, n) data×model."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def describe(mesh) -> str:
+    return f"mesh{dict(zip(mesh.axis_names, mesh.devices.shape))}"

@@ -1,0 +1,188 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in *seconds* (assignment §Roofline):
+
+  compute    = HLO_FLOPs        / (chips × peak_FLOP/s)
+  memory     = HLO_bytes        / (chips × HBM_bw)
+  collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` provides FLOPs and bytes-accessed; collective bytes are
+NOT in cost_analysis, so we parse the optimized HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.
+
+UNIT CALIBRATION (measured on this jax/XLA-CPU build, see DESIGN.md): after
+GSPMD partitioning, ``cost_analysis``/``memory_analysis``/``as_text`` all
+describe the *single-device* SPMD program — i.e. they are already the
+"/ chips" quantities of the formulas above.  We therefore divide by the
+per-chip peaks only, and multiply FLOPs back by ``chips`` when comparing
+against the global 6·N·D model-FLOPs estimate.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e per-chip constants
+PEAK_FLOPS = 197e12         # bf16 MXU
+HBM_BW = 819e9              # bytes/s
+LINK_BW = 50e9              # bytes/s per ICI link (per-chip effective)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e8m0fnu": 1,
+    "f4e2m1fn": 0.5, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%name = TYPE[...] op(...)`; async ops appear as op-start/op-done — count
+# only `-start` (or the sync form) so nothing is double counted.
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\][^\s]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", )
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes per collective kind over the whole module.
+
+    For all-gather the result is the gathered (large) side, for
+    reduce-scatter the operand is the large side — using the max of
+    operand/result would need full operand tracking; the result size is the
+    standard, slightly conservative proxy for wire bytes (each byte of an
+    all-gather result crosses a link once in a ring).
+    """
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(type_str)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # PER-DEVICE HLO FLOPs (see calibration)
+    hbm_bytes: float              # per-device bytes accessed
+    coll_bytes: float             # per-device collective wire bytes
+    chips: int
+    model_flops: Optional[float] = None   # GLOBAL 6·N·D (2·N·D inference)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time lower bound (perfectly overlapped)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        if not self.model_flops or not self.flops:
+            return None
+        return self.model_flops / (self.flops * self.chips)
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """Best-case MFU = model FLOPs over peak at the roofline time."""
+        if not self.model_flops:
+            return None
+        return self.model_flops / (self.chips * PEAK_FLOPS * self.t_bound)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_fraction": self.useful_fraction,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def from_compiled(compiled, hlo_text: str, chips: int,
+                  model_flops: Optional[float] = None) -> Roofline:
+    """Roofline terms from the per-device optimized HLO.
+
+    Uses the trip-count-aware pass (launch/hlo_cost.py) — XLA's built-in
+    cost_analysis counts scan bodies once and is kept only as a cross-check
+    field in the dry-run JSON.
+    """
+    from repro.launch import hlo_cost
+    c = hlo_cost.analyze(hlo_text)
+    return Roofline(flops=c.flops, hbm_bytes=c.bytes,
+                    coll_bytes=c.coll_bytes, chips=chips,
+                    model_flops=model_flops)
+
+
+# ---- model-FLOPs accounting ----------------------------------------------------
+
+
+def count_params(params_struct, active_expert_frac: float = 1.0,
+                 expert_key: str = "w_") -> int:
+    import jax
+    return sum(int(x.size) for x in jax.tree.leaves(params_struct))
+
+
+def model_flops(cfg, params_struct, shape) -> float:
+    """6·N·D for training, 2·N·D for inference; N = active params for MoE."""
+    import jax
+    from jax.tree_util import tree_flatten_with_path
+
+    total = 0
+    expert = 0
+    for path, leaf in tree_flatten_with_path(params_struct)[0]:
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        n = int(leaf.size)
+        total += n
+        if cfg.n_experts and re.search(r"(w_gate|w_up|w_down|smooth)", keys):
+            expert += n
+    n_active = total - expert + (expert * cfg.top_k // max(cfg.n_experts, 1)
+                                 if cfg.n_experts else 0)
+    tokens = shape.seq_len * shape.global_batch
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence (+ attention over the cache, which
+    # is memory- not FLOP-dominated; excluded from the useful-FLOP count)
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,147 @@
+"""ShapeDtypeStruct input specs + step builders for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStructs for
+every model input of that (architecture × input-shape) cell — no device
+allocation anywhere (states/params come from ``jax.eval_shape``).
+
+Cell kinds (assignment):
+  train_*    -> train_step   (loss + grads + AdamW + §4 monitor)
+  prefill_*  -> prefill_step (full-sequence forward, logits)
+  decode_* / long_*
+             -> serve_step   (ONE new token against a seq_len-deep cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import fqt
+from repro.distributed import sharding as shd
+from repro.models import registry
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES_BY_NAME
+from repro.serve.engine import serve_step_fn
+from repro.train import step as step_mod
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """DESIGN.md §Arch-applicability skip rules."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return ("full quadratic attention cannot run 500k-token decode "
+                "(no sub-quadratic path in this arch family)")
+    return None
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: registry.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def train_state_struct(cfg: ModelConfig, tcfg: step_mod.TrainConfig):
+    return jax.eval_shape(
+        lambda: step_mod.init_state(cfg, tcfg, jax.random.PRNGKey(0)))
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                               jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def decode_carry_struct(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: registry.make_decode_state(cfg, shape.global_batch,
+                                           shape.seq_len))
+
+
+@dataclasses.dataclass
+class Cell:
+    """One dry-run cell: a jittable fn + abstract args + shardings."""
+    kind: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Any
+    donate: Tuple[int, ...] = ()
+    act_mode: Optional[str] = "sp"   # activation-constraint mode (None=off)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               qcfg: Optional[fqt.QuantConfig] = None,
+               tcfg: Optional[step_mod.TrainConfig] = None) -> Cell:
+    qcfg = qcfg if qcfg is not None else fqt.nvfp4_paper_config()
+    tcfg = tcfg if tcfg is not None else step_mod.TrainConfig()
+    dp = shd.dp_axes(mesh)
+    dp_size = 1
+    for a, n in zip(mesh.axis_names, mesh.devices.shape):
+        if a in dp:
+            dp_size *= n
+
+    if shape.kind == "train":
+        state = train_state_struct(cfg, tcfg)
+        batch = batch_struct(cfg, shape)
+        st_sh = step_mod.state_shardings(state, mesh)
+        b_spec = P(dp, None) if shape.global_batch % dp_size == 0 else P()
+        b_sh = jax.tree.map(
+            lambda x: NamedSharding(
+                mesh, P(dp, *(None,) * (len(x.shape) - 1))
+                if x.shape[0] % dp_size == 0 else P()), batch)
+        del b_spec
+        fn = step_mod.make_train_step(cfg, qcfg, tcfg, mesh)
+        return Cell("train", fn, (state, batch), (st_sh, b_sh), donate=(0,))
+
+    if shape.kind == "prefill":
+        params = params_struct(cfg)
+        batch = batch_struct(cfg, shape)
+        batch["tokens"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)
+        p_sh = shd.params_shardings(params, mesh)
+        b_sh = jax.tree.map(
+            lambda x: NamedSharding(
+                mesh, P(dp, *(None,) * (len(x.shape) - 1))
+                if x.shape[0] % dp_size == 0 else P()), batch)
+
+        def prefill_step(params, batch):
+            logits, _ = registry.forward(params, cfg, qcfg, batch,
+                                         seed=0, remat=False)
+            return logits
+
+        return Cell("prefill", prefill_step, (params, batch), (p_sh, b_sh))
+
+    # decode / long: one token against a full cache
+    params = params_struct(cfg)
+    carry = decode_carry_struct(cfg, shape)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    p_sh = shd.params_shardings(params, mesh)
+    c_sh = shd.cache_specs(carry, mesh, shape.global_batch)
+    t_sh = NamedSharding(
+        mesh, P(dp, None) if shape.global_batch % dp_size == 0 else P())
+    raw = serve_step_fn(cfg, qcfg)
+
+    def serve_step(params, tokens, carry):
+        return raw(params, tokens, carry)
+
+    return Cell("decode", serve_step, (params, tokens, carry),
+                (p_sh, t_sh, c_sh), donate=(2,))
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    import contextlib
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     donate_argnums=cell.donate)
+    scope = (shd.activation_sharding_scope(mesh, cell.act_mode)
+             if cell.act_mode else contextlib.nullcontext())
+    with mesh, scope:
+        return jitted.lower(*cell.args)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES_BY_NAME[name]

@@ -1,0 +1,464 @@
+"""Shared neural building blocks (pure JAX, FQT-quantized linears).
+
+Every matmul-bearing layer routes through ``QCtx.dense`` -> fp4_matmul, so
+the paper's six quantization points apply uniformly across the zoo.  The
+attention *score/value* batched matmuls stay in bf16 (the paper's scope is
+the three weight GEMMs; same choice as the FP8 FQT line of work — DESIGN.md
+§5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fqt
+from repro.core.fqt import QuantConfig
+from repro.distributed.sharding import constrain
+
+# A large-but-finite mask value: keeps fully-masked rows NaN-free without
+# inf-inf arithmetic anywhere.
+NEG_INF = -1e30
+
+
+class QCtx:
+    """Quantization context: static QuantConfig + per-call SR seed stream.
+
+    A fresh QCtx is created per (layer, step); each ``dense`` call gets a
+    distinct deterministic seed (trace-time counter — stable across jit).
+    """
+
+    def __init__(self, qcfg: QuantConfig, seed: jax.Array):
+        self.qcfg = qcfg
+        self.seed = jnp.asarray(seed, jnp.uint32)
+        self._n = 0
+
+    def fold(self, idx) -> "QCtx":
+        """Child context for layer/expert ``idx`` (idx may be traced)."""
+        mixed = self.seed + jnp.asarray(idx, jnp.uint32) * jnp.uint32(2654435761)
+        return QCtx(self.qcfg, mixed)
+
+    def dense(self, x: jax.Array, w: jax.Array,
+              b: Optional[jax.Array] = None) -> jax.Array:
+        s = self.seed + jnp.uint32(self._n * 40503)
+        self._n += 1
+        return fqt.dense(x, w, b, cfg=self.qcfg, seed=s)
+
+    def dense_hp(self, x: jax.Array, w: jax.Array,
+                 b: Optional[jax.Array] = None) -> jax.Array:
+        """High-precision (bf16) dense — routers, gates (never quantized)."""
+        y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+        if b is not None:
+            y = y + b
+        return y.astype(x.dtype)
+
+
+# ---- initializers ------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16,
+               scale: Optional[float] = None) -> jax.Array:
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# ---- norms / activations ------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)).astype(x.dtype)) * w
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def smooth_swiglu(gate: jax.Array, up: jax.Array,
+                  smooth: jax.Array) -> jax.Array:
+    """Smooth-SwiGLU [Fishman et al. 2024]: per-channel smoothing factor
+    migrates outlier scale out of the quantized down-projection input,
+    preventing the late-training FP8/FP4 instability of SwiGLU.  The factor
+    is divided out of ``up`` before the product and multiplied back after
+    the down projection (caller applies ``smooth`` inverse on the output
+    side), so the function is numerically equivalent in high precision.
+    """
+    z = jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype)
+    return z * (up / smooth)
+
+
+# ---- rotary embeddings ---------------------------------------------------------
+
+
+def rope_tables(positions: jax.Array, head_dim: int,
+                theta: float) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given absolute positions: (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---- chunked (flash-style) attention -------------------------------------------
+
+
+def _attn_dense(q, k, v, qpos, kpos, causal, window):
+    """Reference dense-softmax attention for short sequences.
+
+    q: (B, Sq, KVH, G, D); k/v: (B, Sk, KVH, D); *pos: (Sq,)/(Sk,) absolute.
+    """
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o
+
+
+def _flash_mask(qpch, kp, causal, window, nq, qc, kc):
+    mask = jnp.ones((nq, qc, kc), bool)
+    if causal:
+        mask &= kp[None, None, :] <= qpch[:, :, None]
+    if window is not None:
+        mask &= kp[None, None, :] > qpch[:, :, None] - window
+    return mask[None, :, None, None, :, :]       # broadcast to (B,nq,h,g,q,k)
+
+
+def _flash_fwd_impl(q, k, v, qpos, kpos, causal, window, qc, kc):
+    """Flash forward: q blocks are a PARALLEL leading dim, kv chunks a
+    sequential scan with running (max, denom, acc).
+
+    Keeping the q-block dim parallel (instead of the classic outer scan)
+    exposes it to GSPMD: when the head count does not divide the TP degree
+    (qwen2.5: 40 heads on a 16-way "model" axis; whisper: 8) the q-block
+    dim shards on "model" instead — context-parallel attention.  The
+    ``constrain(..., "qblocks")`` rule picks whichever of (heads, q-blocks)
+    divides.  Returns (out, m, l) blocked as (B, nq, qc, KVH, G, ·).
+    """
+    from repro.distributed.sharding import constrain
+    B, Sq, KVH, G, D = q.shape
+    Sk = k.shape[1]
+    nq, nk = Sq // qc, Sk // kc
+    scale = D ** -0.5
+
+    qch = constrain(q.reshape(B, nq, qc, KVH, G, D), "qblocks")
+    qpch = qpos.reshape(nq, qc)
+    kch = k.reshape(B, nk, kc, KVH, D).swapaxes(0, 1)        # (nk, B, kc, ...)
+    vch = v.reshape(B, nk, kc, KVH, D).swapaxes(0, 1)
+    kpch = kpos.reshape(nk, kc)
+    # dots take the native (bf16) inputs with f32 accumulation: full MXU
+    # rate and half the operand traffic; softmax stats stay f32.
+    def kv_step(carry, kin):
+        m, l, acc = carry                                    # (B,nq,KVH,G,qc)
+        ki, vi, kp = kin
+        s = jnp.einsum("bnqhgd,bkhd->bnhgqk", qch, ki,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(_flash_mask(qpch, kp, causal, window, nq, qc, kc),
+                      s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bnhgqk,bkhd->bnqhgd", p.astype(ki.dtype), vi,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr.transpose(0, 1, 4, 2, 3)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, nq, KVH, G, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, KVH, G, qc), jnp.float32)
+    a0 = jnp.zeros((B, nq, qc, KVH, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kch, vch, kpch))
+    denom = jnp.maximum(l, 1e-30).transpose(0, 1, 4, 2, 3)[..., None]
+    return acc / denom, m, l
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _attn_flash(q, k, v, qpos, kpos, causal, window, qc, kc):
+    """custom_vjp flash attention.
+
+    Plain autodiff of the kv scan stacks its (m, l, acc) carries per step —
+    ~2 GiB × layers × chunks of dynamic-update-slice traffic at the 7B
+    train cell (EXPERIMENTS.md §Perf).  The custom backward recomputes
+    s/p per kv chunk from the saved (q, k, v, out, m, l) instead — the
+    standard flash-attention backward, O(B·S·H·D) residuals.
+    """
+    out, _, _ = _flash_fwd_impl(q, k, v, qpos, kpos, causal, window, qc, kc)
+    B, Sq, KVH, G, D = q.shape
+    return out.reshape(B, Sq, KVH, G, D)
+
+
+def _flash_fwd_rule(q, k, v, qpos, kpos, causal, window, qc, kc):
+    out, m, l = _flash_fwd_impl(q, k, v, qpos, kpos, causal, window, qc, kc)
+    B, Sq, KVH, G, D = q.shape
+    return (out.reshape(B, Sq, KVH, G, D),
+            (q, k, v, qpos, kpos, out, m, l))
+
+
+def _flash_bwd_rule(causal, window, qc, kc, res, dout):
+    q, k, v, qpos, kpos, out, m, l = res
+    B, Sq, KVH, G, D = q.shape
+    Sk = k.shape[1]
+    nq, nk = Sq // qc, Sk // kc
+    scale = D ** -0.5
+
+    qch = q.reshape(B, nq, qc, KVH, G, D)
+    qpch = qpos.reshape(nq, qc)
+    kch = k.reshape(B, nk, kc, KVH, D).swapaxes(0, 1)
+    vch = v.reshape(B, nk, kc, KVH, D).swapaxes(0, 1)
+    kpch = kpos.reshape(nk, kc)
+    do = dout.reshape(B, nq, qc, KVH, G, D).astype(jnp.float32)
+    l_safe = jnp.maximum(l, 1e-30)                           # (B,nq,h,g,qc)
+    # D_i = rowsum(dout * out)
+    Dsum = jnp.sum(do * out, axis=-1)                        # (B,nq,qc,h,g)
+    Dsum = Dsum.transpose(0, 1, 3, 4, 2)                     # (B,nq,h,g,qc)
+
+    dob = do.astype(q.dtype)
+
+    def kv_step(dq, kin):
+        ki, vi, kp = kin
+        s = jnp.einsum("bnqhgd,bkhd->bnhgqk", qch, ki,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(_flash_mask(qpch, kp, causal, window, nq, qc, kc),
+                      s, NEG_INF)
+        p = jnp.exp(s - m[..., None]) / l_safe[..., None]    # (B,nq,h,g,q,k)
+        pb = p.astype(q.dtype)
+        dv = jnp.einsum("bnhgqk,bnqhgd->bkhd", pb, dob,
+                        preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bnqhgd,bkhd->bnhgqk", dob, vi,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - Dsum[..., None]) * scale
+        dsb = ds.astype(q.dtype)
+        dq = dq + jnp.einsum("bnhgqk,bkhd->bnqhgd", dsb, ki,
+                             preferred_element_type=jnp.float32)
+        dk = jnp.einsum("bnhgqk,bnqhgd->bkhd", dsb, qch,
+                        preferred_element_type=jnp.float32)
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((B, nq, qc, KVH, G, D), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(kv_step, dq0, (kch, vch, kpch))
+    dq = dq.reshape(B, Sq, KVH, G, D).astype(q.dtype)
+    dk = dk.swapaxes(0, 1).reshape(B, Sk, KVH, D).astype(k.dtype)
+    dv = dv.swapaxes(0, 1).reshape(B, Sk, KVH, D).astype(v.dtype)
+    zero_pos = np.zeros(qpos.shape, dtype=jax.dtypes.float0)
+    zero_kpos = np.zeros(kpos.shape, dtype=jax.dtypes.float0)
+    return dq, dk, dv, zero_pos, zero_kpos
+
+
+_attn_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def attention_core(q, k, v, *, qpos, kpos, causal=True,
+                   window: Optional[int] = None, chunk: int = 1024,
+                   kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """GQA attention.  q: (B,Sq,H,D), k/v: (B,Sk,KVH,D).
+
+    ``kv_len``: optional dynamic valid-length of k/v (decode with a
+    pre-allocated cache) — positions >= kv_len are masked via kpos trick.
+    """
+    B, Sq, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, D)
+    if kv_len is not None:
+        # invalidate unwritten cache slots by pushing their kpos above any qpos
+        kpos = jnp.where(jnp.arange(k.shape[1]) < kv_len, kpos,
+                         jnp.int32(2 ** 30))
+    if Sq * k.shape[1] <= chunk * chunk or Sq % min(chunk, Sq) != 0 \
+            or k.shape[1] % chunk != 0:
+        o = _attn_dense(qg, k, v, qpos, kpos, causal, window)
+    else:
+        qc = min(chunk, Sq)
+        o = _attn_flash(qg, k, v, qpos, kpos, causal, window, qc, chunk)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---- attention layer (projections + rope + cache) -------------------------------
+
+
+def attn_params(key, d_model: int, n_heads: int, n_kv: int, hd: int,
+                bias: bool = False, dtype=jnp.bfloat16, qk_norm=False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * hd, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * hd, dtype),
+        "wo": dense_init(ks[3], n_heads * hd, d_model, dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((n_kv * hd,), dtype)
+        p["bv"] = jnp.zeros((n_kv * hd,), dtype)
+    if qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Per-layer KV cache.  For SWA the buffer is a rolling window."""
+    k: jax.Array          # (B, S_buf, KVH, D)
+    v: jax.Array
+    length: jax.Array     # scalar int32: tokens written so far
+
+    @staticmethod
+    def init(batch: int, buf: int, n_kv: int, hd: int, dtype=jnp.bfloat16):
+        z = jnp.zeros((batch, buf, n_kv, hd), dtype)
+        return KVCache(z, jnp.zeros_like(z), jnp.zeros((), jnp.int32))
+
+
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=["k", "v", "length"], meta_fields=[])
+
+
+def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
+               rope_theta: float, causal: bool = True,
+               window: Optional[int] = None, chunk: int = 1024,
+               positions: Optional[jax.Array] = None,
+               cache: Optional[KVCache] = None,
+               xkv: Optional[jax.Array] = None,
+               norm_eps: float = 1e-5, use_rope: bool = True):
+    """Self- (or cross-, via xkv) attention with optional KV cache update.
+
+    Returns (out, new_cache).  With a cache, x is the *new* tokens
+    (decode: S=1; prefill: S=prompt) written at positions
+    [cache.length, cache.length + S).  For SWA the cache buffer is
+    min(window, S_buf) and written modulo buffer size (rolling).
+    """
+    B, S, d = x.shape
+    src = x if xkv is None else xkv
+    q = ctx.dense(x, p["wq"], p.get("bq"))
+    k = ctx.dense(src, p["wk"], p.get("bk"))
+    v = ctx.dense(src, p["wv"], p.get("bv"))
+    q = constrain(q.reshape(B, S, n_heads, hd), "heads")
+    k = k.reshape(B, src.shape[1], n_kv, hd)
+    v = v.reshape(B, src.shape[1], n_kv, hd)
+
+    if positions is None:
+        base = cache.length if cache is not None else 0
+        positions = base + jnp.arange(S, dtype=jnp.int32)
+
+    if "q_norm" in p:
+        q = rmsnorm(q, p["q_norm"], norm_eps)
+        k = rmsnorm(k, p["k_norm"], norm_eps)
+
+    if use_rope and xkv is None:
+        cos_q, sin_q = rope_tables(positions, hd, rope_theta)
+        q = apply_rope(q, cos_q[None], sin_q[None])
+        k = apply_rope(k, cos_q[None], sin_q[None])
+
+    new_cache = None
+    if cache is not None and xkv is None:
+        buf = cache.k.shape[1]
+        start = cache.length % buf if window is not None else cache.length
+        # rolling write (SWA) or linear write; S tokens, may wrap for SWA.
+        # If more new tokens than buffer slots, only the last `buf` survive —
+        # slice first so `.at[idx].set` never sees duplicate indices.
+        kw, vw, Sw = k, v, S
+        if S > buf:
+            kw, vw, Sw = k[:, S - buf:], v[:, S - buf:], buf
+            start = (cache.length + (S - buf)) % buf
+        idx = (start + jnp.arange(Sw, dtype=jnp.int32)) % buf
+        ck = cache.k.at[:, idx].set(kw)
+        cv = cache.v.at[:, idx].set(vw)
+        new_len = cache.length + S
+        new_cache = KVCache(ck, cv, new_len)
+        if S > 1:
+            # Prefill (assumed from an empty cache): attend within the fresh
+            # sequence directly — correct for SWA even when S > buf, since
+            # every query's window lies inside the fresh K/V.
+            o = attention_core(q, k, v, qpos=positions, kpos=positions,
+                               causal=causal, window=window, chunk=chunk)
+        else:
+            # Decode: attend the cache buffer.  Absolute position held by
+            # each slot: for SWA, slot j holds the most recent token with
+            # pos % buf == j; linear caches store pos == slot.
+            if window is not None:
+                slot = jnp.arange(buf, dtype=jnp.int32)
+                last = new_len - 1
+                kpos = last - ((last % buf - slot) % buf)
+            else:
+                kpos = jnp.arange(buf, dtype=jnp.int32)
+            kv_len = jnp.minimum(new_len, buf)
+            o = attention_core(q, ck, cv, qpos=positions, kpos=kpos,
+                               causal=causal, window=window, chunk=chunk,
+                               kv_len=kv_len)
+    else:
+        kpos = (positions if xkv is None
+                else jnp.arange(src.shape[1], dtype=jnp.int32))
+        o = attention_core(q, k, v, qpos=positions, kpos=kpos,
+                           causal=causal and xkv is None, window=window,
+                           chunk=chunk)
+
+    o = constrain(o, "heads")
+    out = ctx.dense(o.reshape(B, S, n_heads * hd), p["wo"])
+    return out, new_cache
+
+
+# ---- MLP block -------------------------------------------------------------------
+
+
+def mlp_params(key, d_model: int, d_ff: int, act: str, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    if act in ("swiglu", "smooth_swiglu"):
+        p = {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+        if act == "smooth_swiglu":
+            p["smooth"] = jnp.ones((d_ff,), dtype)
+        return p
+    return {
+        "w_in": dense_init(ks[0], d_model, d_ff, dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": dense_init(ks[1], d_ff, d_model, dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mlp_apply(p, x, ctx: QCtx, act: str):
+    if act in ("swiglu", "smooth_swiglu"):
+        g = constrain(ctx.dense(x, p["w_gate"]), "hidden")
+        u = constrain(ctx.dense(x, p["w_up"]), "hidden")
+        if act == "smooth_swiglu":
+            h = smooth_swiglu(g, u, p["smooth"])
+            return ctx.dense(h, p["w_down"]) * 1.0  # scale folded into w_down
+        h = swiglu(g, u)
+        return ctx.dense(h, p["w_down"])
+    h = jax.nn.gelu(ctx.dense(x, p["w_in"], p["b_in"]).astype(jnp.float32))
+    h = constrain(h, "hidden")
+    return ctx.dense(h.astype(x.dtype), p["w_out"], p["b_out"])

@@ -1,0 +1,317 @@
+"""Mamba2 (SSD) blocks + the zamba2-style hybrid backbone.
+
+The SSD state-space core is computed with the chunk-parallel algorithm
+(intra-chunk quadratic attention-like term + inter-chunk recurrent state
+passing via lax.scan), which is the TPU-friendly form: all heavy lifting is
+MXU matmuls over (chunk x chunk) and (chunk x state) tiles.  The in/out/gate
+projections — the GEMMs a Blackwell-class chip would run in FP4 — go through
+the FQT path; the elementwise recurrence itself stays bf16/f32 (no GEMM to
+accelerate; DESIGN.md §5).
+
+zamba2 hybrid: a backbone of Mamba2 blocks with ONE shared attention block
+(weights shared) applied every ``attn_every`` layers, each application with
+its own LayerNorm (simplification of zamba2's concat-reinjection, noted in
+DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fqt import QuantConfig
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import (KVCache, QCtx, attn_apply, attn_params,
+                                 dense_init, embed_init, mlp_params,
+                                 mlp_apply, rmsnorm)
+
+_SEED_STRIDE = jnp.uint32(0x9E3779B9)
+
+
+# ---- Mamba2 block -------------------------------------------------------------
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.n_ssm_heads or max(1, d_inner // 64)
+    P = d_inner // H                       # head dim
+    N = cfg.ssm_state                      # state dim
+    return d_inner, H, P, N
+
+
+def mamba_params(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d_inner, H, P, N = mamba_dims(cfg)
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z(d_inner), x(d_inner), B(N), C(N), dt(H)]
+    d_in_proj = 2 * d_inner + 2 * N + H
+    p = {
+        "in_proj": dense_init(ks[0], cfg.d_model, d_in_proj, dtype),
+        "out_proj": dense_init(ks[1], d_inner, cfg.d_model, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, d_inner + 2 * N),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv along time.  x: (B,S,C); w: (K,C).
+
+    Returns (y, new_state) where state carries the last K-1 inputs."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunk-parallel SSD.  xh:(B,S,H,P) dt:(B,S,H) A:(H,) Bm/Cm:(B,S,N).
+
+    y[t] = C[t] . h[t],  h[t] = exp(dt[t]A) h[t-1] + dt[t] B[t] x[t]^T
+    (per head; B/C shared across heads — multi-value attention form of SSD).
+    Returns (y, final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    xc = xh.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    # per-step log decay  a[t] = dt[t] * A  (A negative)
+    la = dtc * A[None, None, None, :]                 # (B,nc,c,H) log-decay
+    csum = jnp.cumsum(la, axis=2)                     # within-chunk cumsum
+
+    # ---- intra-chunk (quadratic in chunk len, like masked attention) ----
+    # L[s,t] = exp(csum[s] - csum[t]) for s >= t  (decay from t+1..s)
+    diff = csum[:, :, :, None, :] - csum[:, :, None, :, :]   # (B,nc,c,c,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: above-diagonal diff is positive (csum decreasing) and
+    # would overflow exp for long chunks
+    Ldec = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -1e30))
+    scores = jnp.einsum("bcsn,bctn->bcst", Cc, Bc)            # (B,nc,c,c)
+    W = scores[..., None] * Ldec * dtc[:, :, None, :, :]      # (B,nc,s,t,H)
+    y_intra = jnp.einsum("bcsth,bcthp->bcshp", W, xc)
+
+    # ---- chunk states ----
+    # state_c = sum_t exp(csum[last] - csum[t]) dt[t] B[t] x[t]^T
+    decay_to_end = jnp.exp(csum[:, :, -1:, :] - csum)          # (B,nc,c,H)
+    sbx = jnp.einsum("bcth,bctn,bcthp->bchpn",
+                     decay_to_end * dtc, Bc, xc)               # (B,nc,H,P,N)
+
+    # ---- inter-chunk scan ----
+    chunk_decay = jnp.exp(csum[:, :, -1, :])                   # (B,nc,H)
+
+    def scan_body(h, per_chunk):
+        s_new, dec = per_chunk                                 # (B,H,P,N),(B,H)
+        h_out = h                                              # state entering
+        h = h * dec[:, :, None, None] + s_new
+        return h, h_out
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    hT, h_in = jax.lax.scan(scan_body, h0,
+                            (sbx.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_in = h_in.swapaxes(0, 1)                                 # (B,nc,H,P,N)
+
+    # contribution of the entering state to each position
+    decay_from_start = jnp.exp(csum)                           # (B,nc,c,H)
+    y_inter = jnp.einsum("bcsn,bchpn,bcsh->bcshp", Cc, h_in, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, hT
+
+
+def mamba_apply(p, x, ctx: QCtx, cfg: ModelConfig, *,
+                state=None, chunk: int = 64):
+    """One Mamba2 block.  state: None (train) or dict(conv, ssm) for decode.
+
+    Returns (y, new_state)."""
+    B, S, d = x.shape
+    d_inner, H, P, N = mamba_dims(cfg)
+    zxbcdt = ctx.dense(x, p["in_proj"])
+    z, xr, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    conv_in = constrain(jnp.concatenate([xr, Bm, Cm], axis=-1), "hidden")
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], conv_state)
+    xr, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    xh = xr.reshape(B, S, H, P).astype(jnp.float32)
+    Bm32, Cm32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    if state is None:
+        c = min(chunk, S)
+        if S % c:
+            raise ValueError(f"seq {S} not divisible by ssm chunk {c}")
+        y, hT = _ssd_chunked(xh, dt, A, Bm32, Cm32, c)
+    else:
+        # decode: S == 1 single recurrent step
+        h = state["ssm"]                                          # (B,H,P,N)
+        dec = jnp.exp(dt[:, 0] * A[None, :])                      # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], Bm32[:, 0], xh[:, 0])
+        h = h * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm32[:, 0], h)[:, None]    # (B,1,H,P)
+        hT = h
+
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)    # gate
+    out = ctx.dense(y, p["out_proj"])
+    new_state = {"conv": new_conv, "ssm": hT}
+    return out, new_state
+
+
+# ---- zamba2 hybrid backbone ----------------------------------------------------
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    kE, kM, kA, kH, kF = jax.random.split(key, 5)
+    mamba_layers = jax.vmap(
+        lambda k: mamba_params(k, cfg, dtype))(
+        jax.random.split(kM, cfg.n_layers))
+    params = {
+        "embed": embed_init(kE, cfg.padded_vocab, cfg.d_model, dtype),
+        "mamba": mamba_layers,
+        "mamba_ln": jnp.ones((cfg.n_layers, cfg.d_model), dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(kH, cfg.d_model, cfg.padded_vocab, dtype),
+    }
+    if cfg.attn_every:
+        params["shared_attn"] = {
+            "attn": attn_params(kA, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd, dtype=dtype),
+            "mlp": mlp_params(kF, cfg.d_model, cfg.d_ff, "swiglu", dtype),
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+        }
+    return params
+
+
+def _n_attn(cfg: ModelConfig) -> int:
+    return (cfg.n_layers // cfg.attn_every) if cfg.attn_every else 0
+
+
+def _apply_backbone(params, cfg, qcfg, x, seed, *, states, caches,
+                    remat=False, ssm_chunk=64):
+    """Mamba layers with the shared attention block interleaved.
+
+    The mamba stack is scanned in groups of ``attn_every``; the (shared)
+    attention block runs between groups with its own KV cache per
+    application."""
+    L, ae = cfg.n_layers, (cfg.attn_every or cfg.n_layers)
+    n_groups = (L + ae - 1) // ae
+    seeds = jnp.asarray(seed, jnp.uint32) + jnp.arange(
+        L, dtype=jnp.uint32) * _SEED_STRIDE
+
+    def mamba_body(x, per_layer):
+        lp, ln_w, s, st = per_layer
+        ctx = QCtx(qcfg, s)
+        x = constrain(x, "res")
+        y, new_st = mamba_apply(lp, rmsnorm(x, ln_w, cfg.norm_eps), ctx, cfg,
+                                state=st, chunk=ssm_chunk)
+        return x + y, new_st
+
+    if remat:
+        mamba_body = jax.checkpoint(
+            mamba_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def slice_group(tree, g0, g1):
+        return jax.tree.map(lambda a: a[g0:g1], tree)
+
+    new_states, new_caches = [], []
+    for g in range(n_groups):
+        g0, g1 = g * ae, min((g + 1) * ae, L)
+        xs = (slice_group(params["mamba"], g0, g1),
+              params["mamba_ln"][g0:g1], seeds[g0:g1],
+              slice_group(states, g0, g1) if states is not None else None)
+        x, st = jax.lax.scan(mamba_body, x, xs)
+        new_states.append(st)
+        if cfg.attn_every and g1 % ae == 0 and "shared_attn" in params:
+            sp = params["shared_attn"]
+            ctx = QCtx(qcfg, jnp.asarray(seed, jnp.uint32)
+                       + jnp.uint32(0x51ED2701 + g))
+            cache_g = caches[g] if caches is not None else None
+            h, nc = attn_apply(
+                sp["attn"], rmsnorm(x, sp["ln1"], cfg.norm_eps), ctx,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+                rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk,
+                cache=cache_g)
+            x = x + h
+            x = x + mlp_apply(sp["mlp"], rmsnorm(x, sp["ln2"], cfg.norm_eps),
+                              ctx, "swiglu")
+            new_caches.append(nc)
+    states_out = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_states)
+    return x, states_out, new_caches
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    """Per-layer SSM + conv states (decode) and shared-attn KV caches."""
+    d_inner, H, P, N = mamba_dims(cfg)
+
+    def one(_):
+        return {
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner + 2 * N),
+                              dtype),
+            "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        }
+
+    states = jax.vmap(one)(jnp.arange(cfg.n_layers))
+    return states
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    return [KVCache.init(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype)
+            for _ in range(_n_attn(cfg))]
+
+
+def forward(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, *, seed=0,
+            remat: bool = True, ssm_chunk: int = 64):
+    x = constrain(params["embed"][tokens], "res")
+    x, _, _ = _apply_backbone(params, cfg, qcfg, x, seed, states=None,
+                              caches=None, remat=remat, ssm_chunk=ssm_chunk)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    ctx = QCtx(qcfg if cfg.quantize_lm_head else QuantConfig(),
+               jnp.asarray(seed, jnp.uint32) + jnp.uint32(0xABCDEF))
+    logits = constrain(ctx.dense(x, params["lm_head"]), "logits")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def decode_step(params, cfg, qcfg, tokens, carry, *, seed=0):
+    """carry = (states, caches).  tokens: (B,1)."""
+    states, caches = carry
+    x = params["embed"][tokens]
+    x, new_states, new_caches = _apply_backbone(
+        params, cfg, qcfg, x, seed, states=states, caches=caches,
+        remat=False)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    ctx = QCtx(qcfg if cfg.quantize_lm_head else QuantConfig(),
+               jnp.asarray(seed, jnp.uint32) + jnp.uint32(0xABCDEF))
+    logits = ctx.dense(x, params["lm_head"])
+    return logits, (new_states, new_caches)
+
+
+def loss_fn(params, cfg, qcfg, batch, *, seed=0, remat=True,
+            ssm_chunk: int = 64):
+    tokens = batch["tokens"]
+    logits, _ = forward(params, cfg, qcfg, tokens[:, :-1], seed=seed,
+                        remat=remat, ssm_chunk=ssm_chunk)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, {"nll": loss, "aux": jnp.zeros((), jnp.float32)}

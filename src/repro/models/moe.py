@@ -1,0 +1,145 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded sort-based
+dispatch (megablocks-style gather/scatter — no giant one-hot dispatch
+einsums), experts computed by a lax.scan over stacked expert weights so HLO
+size is O(1) in the expert count (qwen3: 128 experts).
+
+**Group-limited dispatch** (GShard-style): tokens are split into
+``cfg.moe_groups`` groups, each routed independently with capacity C/G.
+With groups pinned to the data-parallel axis, the argsort/scatter of the
+dispatch runs *locally per shard* instead of sorting the global token
+array — this removed the all-gather storm that made the qwen3 prefill cell
+collective-bound at baseline (EXPERIMENTS.md §Perf).  ``moe_groups = 0``
+(smoke-test default) keeps one global group.
+
+The router runs in bf16 (precision-critical, tiny — DESIGN.md §5); expert
+FFN GEMMs go through the FQT path like every other linear.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import QCtx, dense_init, swiglu, smooth_swiglu
+
+
+def moe_params(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+
+    def stack(k, din, dout):
+        return jax.vmap(lambda kk: dense_init(kk, din, dout, dtype))(
+            jax.random.split(k, E))
+
+    p = {
+        "router": dense_init(ks[0], d, E, dtype, scale=0.02),
+        "w_gate": stack(ks[1], d, f),
+        "w_up": stack(ks[2], d, f),
+        "w_down": stack(ks[3], f, d),
+    }
+    if cfg.act == "smooth_swiglu":
+        p["smooth"] = jnp.ones((E, f), dtype)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(cfg.top_k, (c + 3) // 4 * 4)
+
+
+def _dispatch(x, logits, cfg: ModelConfig, C: int):
+    """Per-group routing.  x: (Tg, d), logits: (Tg, E).
+
+    Returns (xe (E, C, d), combine metadata, aux loss)."""
+    Tg, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)               # (Tg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)         # renorm
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)                                   # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=1),
+        axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # sort-based dispatch (local to the group)
+    flat_e = expert_idx.reshape(-1)                                # (Tg*K,)
+    flat_t = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), K)
+    flat_g = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # rank within expert = position - first position of that expert
+    first = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype), side="left")
+    rank = jnp.arange(Tg * K, dtype=jnp.int32) - first[se]
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)                   # dustbin
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(x[st])
+    xe = buf[: E * C].reshape(E, C, d)
+    return xe, (slot, st, sg, keep), aux
+
+
+def _combine(ye, meta, Tg: int):
+    """ye: (E, C, d) -> y: (Tg, d) using the dispatch metadata."""
+    slot, st, sg, keep = meta
+    E_C, d = ye.shape[0] * ye.shape[1], ye.shape[2]
+    ye_flat = jnp.concatenate(
+        [ye.reshape(E_C, d), jnp.zeros((1, d), ye.dtype)], axis=0)
+    contrib = ye_flat[slot] * sg[:, None].astype(ye.dtype)
+    return jnp.zeros((Tg, d), ye_flat.dtype).at[st].add(
+        jnp.where(keep[:, None], contrib, 0))
+
+
+def moe_apply(p, x: jax.Array, ctx: QCtx,
+              cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (T, d) -> (y: (T, d), aux_loss scalar)."""
+    T, d = x.shape
+    E = cfg.n_experts
+    G = cfg.moe_groups if (cfg.moe_groups and T % cfg.moe_groups == 0) else 1
+    Tg = T // G
+    C = _capacity(Tg, cfg)
+
+    # ---- routing (bf16, full precision router) ----
+    logits = ctx.dense_hp(x, p["router"]).astype(jnp.float32)      # (T, E)
+
+    xg = constrain(x.reshape(G, Tg, d), "groups")           # groups -> dp
+    lg = logits.reshape(G, Tg, E)
+    xe, meta, aux = jax.vmap(
+        lambda xi, li: _dispatch(xi, li, cfg, C))(xg, lg)
+    aux = jnp.mean(aux)
+    # (G, E, C, d) -> (E, G*C, d): per-expert GEMMs batched over groups
+    xe = constrain(xe, "groups")
+    xe = xe.swapaxes(0, 1).reshape(E, G * C, d)
+
+    # ---- expert FFN (scan over experts; FQT dense) ----
+    smooth = p.get("smooth")
+
+    def one_expert(carry, inp):
+        if smooth is not None:
+            wg, wu, wd, sm, eidx = inp
+        else:
+            (wg, wu, wd, eidx), sm = inp, None
+        ectx = ctx.fold(eidx)
+        xi = xe[eidx]
+        g = ectx.dense(xi, wg)
+        u = ectx.dense(xi, wu)
+        h = smooth_swiglu(g, u, sm) if sm is not None else swiglu(g, u)
+        return carry, ectx.dense(h, wd)
+
+    eidx = jnp.arange(E, dtype=jnp.int32)
+    xs = ((p["w_gate"], p["w_up"], p["w_down"], p["smooth"], eidx)
+          if smooth is not None
+          else (p["w_gate"], p["w_up"], p["w_down"], eidx))
+    _, ye = jax.lax.scan(one_expert, None, xs)               # (E, G*C, d)
+
+    # ---- combine (per group) ----
+    ye = constrain(ye.reshape(E, G, C, d).swapaxes(0, 1),
+                   "groups")                                  # (G, E, C, d)
+    y = jax.vmap(lambda yi, mi: _combine(yi, mi, Tg))(ye, meta)
+    return y.reshape(T, d).astype(x.dtype), aux

@@ -1,0 +1,138 @@
+"""Uniform model API over all families.
+
+  init_params(cfg, key)                     -> params
+  loss_fn(params, cfg, qcfg, batch, seed)   -> (loss, metrics)
+  forward(params, cfg, qcfg, tokens, ...)   -> (logits, aux)
+  make_decode_state(cfg, batch, max_len)    -> carry for decode_step
+  decode_step(params, cfg, qcfg, tok, c)    -> (logits, carry)
+
+The VLM family reuses the dense transformer with a prefix of precomputed
+patch embeddings (frontend stub per the assignment).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fqt import QuantConfig
+from repro.models import mamba2, transformer, whisper, xlstm
+from repro.models.config import ModelConfig
+
+_TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.init(cfg, key, dtype)
+    if cfg.family == "hybrid":
+        return mamba2.init(cfg, key, dtype)
+    if cfg.family == "ssm":
+        return xlstm.init(cfg, key, dtype)
+    if cfg.family == "encdec":
+        return whisper.init(cfg, key, dtype)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def loss_fn(params, cfg: ModelConfig, qcfg: QuantConfig,
+            batch: Dict[str, Any], *, seed=0, remat: bool = True):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.loss_fn(params, cfg, qcfg, batch, seed=seed,
+                                   remat=remat)
+    if cfg.family == "hybrid":
+        return mamba2.loss_fn(params, cfg, qcfg, batch, seed=seed,
+                              remat=remat)
+    if cfg.family == "ssm":
+        return xlstm.loss_fn(params, cfg, qcfg, batch, seed=seed, remat=remat)
+    if cfg.family == "encdec":
+        return whisper.loss_fn(params, cfg, qcfg, batch, seed=seed,
+                               remat=remat)
+    raise ValueError(cfg.family)
+
+
+def forward(params, cfg: ModelConfig, qcfg: QuantConfig, batch, *, seed=0,
+            remat: bool = False):
+    tokens = batch["tokens"]
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.forward(params, cfg, qcfg, tokens, seed=seed,
+                                   prefix_embeds=batch.get("prefix_embeds"),
+                                   remat=remat)
+    if cfg.family == "hybrid":
+        return mamba2.forward(params, cfg, qcfg, tokens, seed=seed,
+                              remat=remat)
+    if cfg.family == "ssm":
+        return xlstm.forward(params, cfg, qcfg, tokens, seed=seed,
+                             remat=remat)
+    if cfg.family == "encdec":
+        return whisper.forward(params, cfg, qcfg, tokens,
+                               frames=batch.get("frames"), seed=seed,
+                               remat=remat)
+    raise ValueError(cfg.family)
+
+
+def make_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Carry passed to decode_step; represents a cache filled to max_len
+    capacity (dry-run shapes: the decode cell is 'one new token against a
+    seq_len-deep cache')."""
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.init_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "hybrid":
+        return (mamba2.init_state(cfg, batch, dtype),
+                mamba2.init_cache(cfg, batch, max_len, dtype))
+    if cfg.family == "ssm":
+        return xlstm.init_state(cfg, batch)
+    if cfg.family == "encdec":
+        enc_out = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), dtype)
+        return (enc_out, whisper.init_cache(cfg, batch, max_len, dtype))
+    raise ValueError(cfg.family)
+
+
+def prefill(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, carry,
+            *, seed=0, extras=None):
+    """Fill the decode carry from a prompt.  Returns (last_logits, carry).
+
+    Transformer/enc-dec families use the native batched prefill; the
+    recurrent families (hybrid/ssm) prefill by scanning decode_step over the
+    prompt (reference implementation — their decode state is O(1) so this
+    is memory-optimal, just not chunk-parallel).
+    """
+    extras = extras or {}
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        logits, caches = transformer.prefill(
+            params, cfg, qcfg, tokens, carry, seed=seed,
+            prefix_embeds=extras.get("prefix_embeds"))
+        return logits[:, -1], caches
+    if cfg.family == "encdec":
+        frames = extras.get("frames")
+        if frames is None:
+            frames = jnp.zeros((tokens.shape[0], cfg.enc_seq, cfg.d_model),
+                               jnp.bfloat16)
+        enc_out = whisper.encode(params, cfg, qcfg, frames, seed=seed)
+        logits, carry = whisper.prefill(params, cfg, qcfg, tokens, enc_out,
+                                        carry[1], seed=seed)
+        return logits[:, -1], carry
+
+    def body(c, tok):
+        logits, c = decode_step(params, cfg, qcfg, tok[:, None], c,
+                                seed=seed)
+        return c, logits[:, -1]
+
+    carry, logits = jax.lax.scan(body, carry, tokens.T)
+    return logits[-1], carry
+
+
+def decode_step(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, carry,
+                *, seed=0):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.decode_step(params, cfg, qcfg, tokens, carry,
+                                       seed=seed)
+    if cfg.family == "hybrid":
+        return mamba2.decode_step(params, cfg, qcfg, tokens, carry, seed=seed)
+    if cfg.family == "ssm":
+        return xlstm.decode_step(params, cfg, qcfg, tokens, carry, seed=seed)
+    if cfg.family == "encdec":
+        return whisper.decode_step(params, cfg, qcfg, tokens, carry,
+                                   seed=seed)
+    raise ValueError(cfg.family)

@@ -1,0 +1,181 @@
+"""Decoder-only LM transformer (dense / MoE / VLM-backbone families).
+
+Layers are *stacked* and applied with lax.scan so HLO size (and dry-run
+compile time) is O(1) in depth — essential for llama3-405b's 126 layers on a
+512-device mesh.  Optional per-layer remat (jax.checkpoint) bounds activation
+memory for the train shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fqt import QuantConfig
+from repro.distributed.sharding import constrain
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (KVCache, QCtx, attn_apply, attn_params,
+                                 dense_init, embed_init, mlp_apply,
+                                 mlp_params, rmsnorm)
+
+_SEED_STRIDE = jnp.uint32(0x9E3779B9)
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    kE, kL, kH = jax.random.split(key, 3)
+
+    def layer_init(k):
+        ka, km, kn = jax.random.split(k, 3)
+        p = {
+            "attn": attn_params(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd, cfg.qkv_bias, dtype,
+                                qk_norm=cfg.use_qk_norm),
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+        }
+        if cfg.n_experts:
+            p["moe"] = moe_mod.moe_params(km, cfg, dtype)
+        else:
+            p["mlp"] = mlp_params(km, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+        return p
+
+    layers = jax.vmap(layer_init)(jax.random.split(kL, cfg.n_layers))
+    params = {
+        "embed": embed_init(kE, cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kH, cfg.d_model, cfg.padded_vocab,
+                                       dtype)
+    return params
+
+
+def _layer_apply(cfg: ModelConfig, lp, x, seed, *, positions, cache,
+                 qcfg: QuantConfig):
+    ctx = QCtx(qcfg, seed)
+    x = constrain(x, "res")
+    h, new_cache = attn_apply(
+        lp["attn"], rmsnorm(x, lp["ln1"], cfg.norm_eps), ctx,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+        rope_theta=cfg.rope_theta, window=cfg.sliding_window,
+        chunk=cfg.attn_chunk, positions=positions, cache=cache,
+        norm_eps=cfg.norm_eps)
+    x = x + h
+    hin = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        B, S, d = hin.shape
+        y2, aux = moe_mod.moe_apply(lp["moe"], hin.reshape(B * S, d), ctx, cfg)
+        y = y2.reshape(B, S, d)
+    else:
+        y = mlp_apply(lp["mlp"], hin, ctx, cfg.act)
+        aux = jnp.zeros((), jnp.float32)
+    return x + y, new_cache, aux
+
+
+def apply_layers(params, cfg: ModelConfig, qcfg: QuantConfig, x, seed, *,
+                 positions=None, caches=None, remat: bool = False):
+    """Scan the stacked layers.  Returns (x, new_caches, aux_loss_sum)."""
+    L = cfg.n_layers
+    seeds = jnp.asarray(seed, jnp.uint32) + jnp.arange(
+        L, dtype=jnp.uint32) * _SEED_STRIDE
+
+    def body(x, per_layer):
+        lp, s, c = per_layer
+        y, nc, aux = _layer_apply(cfg, lp, x, s, positions=positions,
+                                  cache=c, qcfg=qcfg)
+        return y, (nc, aux)
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    xs = (params["layers"], seeds, caches)
+    x, (new_caches, auxes) = jax.lax.scan(body, x, xs)
+    return x, new_caches, jnp.sum(auxes)
+
+
+def _logits(params, cfg: ModelConfig, qcfg: QuantConfig, x, seed):
+    head_cfg = qcfg if cfg.quantize_lm_head else QuantConfig()
+    ctx = QCtx(head_cfg, jnp.asarray(seed, jnp.uint32) + jnp.uint32(0xABCDEF))
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = constrain(ctx.dense(x, w), "logits")
+    if cfg.padded_vocab != cfg.vocab_size:   # mask padded ids
+        neg = jnp.full((cfg.padded_vocab - cfg.vocab_size,), -1e30,
+                       logits.dtype)
+        logits = logits.at[..., cfg.vocab_size:].set(neg)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, *,
+            seed=0, prefix_embeds: Optional[jax.Array] = None,
+            remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward (train/prefill).  Returns (logits, aux_loss).
+
+    ``prefix_embeds``: (B, P, d) pre-computed modality embeddings (VLM stub)
+    prepended to the token embeddings.
+    """
+    x = constrain(params["embed"][tokens], "res")
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, _, aux = apply_layers(params, cfg, qcfg, x, seed,
+                             positions=positions, caches=None, remat=remat)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if prefix_embeds is not None:
+        x = x[:, prefix_embeds.shape[1]:]
+    return _logits(params, cfg, qcfg, x, seed), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    buf = max_len if cfg.sliding_window is None else min(
+        max_len, cfg.sliding_window)
+
+    def one(_):
+        return KVCache.init(batch, buf, cfg.n_kv_heads, cfg.hd, dtype)
+
+    return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+def prefill(params, cfg, qcfg, tokens, caches, *, seed=0,
+            prefix_embeds=None):
+    """Run the prompt through the model, filling caches; returns
+    (last_token_logits, caches)."""
+    x = params["embed"][tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x, new_caches, _ = apply_layers(params, cfg, qcfg, x, seed,
+                                    positions=None, caches=caches,
+                                    remat=False)
+    x = rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return _logits(params, cfg, qcfg, x, seed), new_caches
+
+
+def decode_step(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, caches,
+                *, seed=0):
+    """One new token per sequence.  tokens: (B, 1).  Returns (logits, caches)."""
+    x = params["embed"][tokens]
+    x, new_caches, _ = apply_layers(params, cfg, qcfg, x, seed,
+                                    positions=None, caches=caches,
+                                    remat=False)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _logits(params, cfg, qcfg, x, seed), new_caches
+
+
+def loss_fn(params, cfg: ModelConfig, qcfg: QuantConfig, batch, *, seed=0,
+            remat: bool = True):
+    """Next-token cross-entropy (+ MoE aux).  batch: {tokens, (prefix_embeds)}."""
+    tokens = batch["tokens"]
+    logits, aux = forward(params, cfg, qcfg, tokens[:, :-1], seed=seed,
+                          prefix_embeds=batch.get("prefix_embeds"),
+                          remat=remat)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss + cfg.router_aux_weight * aux, {"nll": loss, "aux": aux}

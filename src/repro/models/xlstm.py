@@ -1,0 +1,309 @@
+"""xLSTM: mLSTM (matrix-memory, chunk-parallel) + sLSTM (scalar-memory,
+sequential) blocks, per Beck et al. 2024 (arXiv:2405.04517).
+
+Every ``slstm_every``-th block is sLSTM, the rest mLSTM.  All projections
+(q/k/v, gates, up/down) are FQT-quantized GEMMs; the recurrent cell math is
+elementwise f32 (DESIGN.md §5).
+
+mLSTM runs in a chunkwise-parallel form (gated linear attention with scalar
+per-head decay), so training is sub-quadratic and decode carries O(1) state —
+xlstm-125m therefore runs the long_500k cell.
+
+Numerics note: the exponential input gate is clamped (preactivation <= 3)
+instead of carrying the running-max stabiliser of the reference CUDA kernels;
+with the clamp, chunk-local weights are bounded by e^3 and plain f32 exp is
+safe.  Real xLSTM implementations clamp similarly before stabilising.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fqt import QuantConfig
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import QCtx, dense_init, embed_init, rmsnorm, swiglu
+
+_SEED_STRIDE = jnp.uint32(0x9E3779B9)
+IGATE_CLAMP = 3.0
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = int(cfg.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    P = d_inner // H
+    return d_inner, H, P
+
+
+# ---- mLSTM -------------------------------------------------------------------
+
+
+def mlstm_params(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    d_inner, H, P = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * d_inner, dtype),   # [x arm, gate arm]
+        "w_q": dense_init(ks[1], d_inner, d_inner, dtype),
+        "w_k": dense_init(ks[2], d_inner, d_inner, dtype),
+        "w_v": dense_init(ks[3], d_inner, d_inner, dtype),
+        "w_if": dense_init(ks[4], d_inner, 2 * H, dtype, scale=0.01),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(jnp.float32),
+        "w_down": dense_init(ks[5], d_inner, d, dtype),
+        "norm": jnp.ones((d_inner,), dtype),
+    }
+
+
+def _mlstm_chunked(q, k, v, li, lf, chunk: int):
+    """q,k,v: (B,S,H,P); li/lf: (B,S,H) log input / log forget gates.
+
+      C_t = f_t C_{t-1} + i_t v_t k_t^T      (C: (P_v, P_k))
+      n_t = f_t n_{t-1} + i_t k_t
+      y_t = (C_t q_t) / (max(|n_t . q_t|, 1))
+
+    Chunk-parallel: intra-chunk masked-decay attention + lax.scan over chunk
+    states.  Returns (y, (C_T, n_T))."""
+    B, S, H, P = q.shape
+    nc = S // chunk
+    qc = q.reshape(B, nc, chunk, H, P).astype(jnp.float32) * (P ** -0.5)
+    kc = k.reshape(B, nc, chunk, H, P).astype(jnp.float32)
+    vc = v.reshape(B, nc, chunk, H, P).astype(jnp.float32)
+    lic = li.reshape(B, nc, chunk, H)
+    lfc = lf.reshape(B, nc, chunk, H)
+    F = jnp.cumsum(lfc, axis=2)                          # log prod f_1..s
+
+    # intra-chunk weights  w[s,t] = exp(F_s - F_t + li_t),  s >= t
+    logw = (F[:, :, :, None, :] - F[:, :, None, :, :]
+            + lic[:, :, None, :, :])                     # (B,nc,s,t,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.exp(jnp.where(mask[None, None, :, :, None], logw, -1e30))
+    scores = jnp.einsum("bcshp,bcthp->bcsth", qc, kc)    # (B,nc,s,t,H)
+    y_intra = jnp.einsum("bcsth,bcsth,bcthp->bcshp", scores, w, vc)
+    n_intra = jnp.einsum("bcsth,bcthp->bcshp", w, kc)
+
+    # chunk summaries (contribution of chunk c to the state after chunk c)
+    dec_end = jnp.exp(F[:, :, -1:, :] - F + lic)         # (B,nc,t,H)
+    C_sum = jnp.einsum("bcth,bcthv,bcthk->bchvk", dec_end, vc, kc)
+    n_sum = jnp.einsum("bcth,bcthk->bchk", dec_end, kc)
+    chunk_dec = jnp.exp(F[:, :, -1, :])                  # (B,nc,H)
+
+    def body(carry, xs):
+        C, n = carry
+        Cs, ns, dec = xs
+        C_in, n_in = C, n
+        C = C * dec[:, :, None, None] + Cs
+        n = n * dec[:, :, None] + ns
+        return (C, n), (C_in, n_in)
+
+    C0 = jnp.zeros((B, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B, H, P), jnp.float32)
+    (CT, nT), (C_in, n_in) = jax.lax.scan(
+        body, (C0, n0),
+        (C_sum.swapaxes(0, 1), n_sum.swapaxes(0, 1), chunk_dec.swapaxes(0, 1)))
+    C_in = C_in.swapaxes(0, 1)                           # (B,nc,H,Pv,Pk)
+    n_in = n_in.swapaxes(0, 1)                           # (B,nc,H,Pk)
+
+    decf = jnp.exp(F)                                    # (B,nc,s,H)
+    y_inter = jnp.einsum("bcshk,bchvk,bcsh->bcshv", qc, C_in, decf)
+    n_vec = n_intra + n_in[:, :, None, :, :] * decf[..., None]
+    qn = jnp.einsum("bcshk,bcshk->bcsh", qc, n_vec)
+    denom = jnp.maximum(jnp.abs(qn), 1.0)
+    y = ((y_intra + y_inter) / denom[..., None]).reshape(B, S, H, P)
+    return y, (CT, nT)
+
+
+def mlstm_apply(p, x, ctx: QCtx, cfg: ModelConfig, *, state=None,
+                chunk: int = 64):
+    """Pre-up-projected mLSTM block.  Returns (y, new_state=(C, n))."""
+    B, S, d = x.shape
+    d_inner, H, P = _dims(cfg)
+    up = constrain(ctx.dense(x, p["w_up"]), "hidden")
+    xa, ga = jnp.split(up, 2, axis=-1)                   # (B,S,d_inner) each
+    q = constrain(ctx.dense(xa, p["w_q"]).reshape(B, S, H, P), "heads")
+    k = constrain(ctx.dense(xa, p["w_k"]).reshape(B, S, H, P), "heads")
+    v = constrain(ctx.dense(xa, p["w_v"]).reshape(B, S, H, P), "heads")
+    gif = ctx.dense_hp(xa, p["w_if"]).astype(jnp.float32) + p["b_if"]
+    gi, gf = jnp.split(gif, 2, axis=-1)                  # (B,S,H)
+    li = jnp.minimum(gi, IGATE_CLAMP)                    # log i (clamped exp)
+    lf = jax.nn.log_sigmoid(gf)                          # log f
+
+    if state is None:
+        c = min(chunk, S)
+        if S % c:
+            raise ValueError(f"seq {S} not divisible by mlstm chunk {c}")
+        y, new_state = _mlstm_chunked(q, k, v, li, lf, c)
+    else:
+        C, n = state
+        i = jnp.exp(li[:, 0])                            # (B,H)
+        f = jnp.exp(lf[:, 0])
+        q0 = q[:, 0].astype(jnp.float32) * (P ** -0.5)
+        k0 = k[:, 0].astype(jnp.float32)
+        v0 = v[:, 0].astype(jnp.float32)
+        C = C * f[..., None, None] + i[..., None, None] * jnp.einsum(
+            "bhv,bhk->bhvk", v0, k0)
+        n = n * f[..., None] + i[..., None] * k0
+        num = jnp.einsum("bhk,bhvk->bhv", q0, C)
+        qn = jnp.einsum("bhk,bhk->bh", q0, n)
+        y = (num / jnp.maximum(jnp.abs(qn), 1.0)[..., None])[:, None]
+        new_state = (C, n)
+
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(ga.astype(jnp.float32)).astype(x.dtype)
+    return ctx.dense(y, p["w_down"]), new_state
+
+
+# ---- sLSTM -------------------------------------------------------------------
+
+
+def slstm_params(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    f = int(cfg.proj_factor * d)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, dtype),
+        "r_gates": dense_init(ks[1], d, 4 * d, dtype, scale=0.01),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "w_ff_gate": dense_init(ks[2], d, f, dtype),
+        "w_ff_up": dense_init(ks[2], d, f, dtype),
+        "w_ff_down": dense_init(ks[3], f, d, dtype),
+        "norm": jnp.ones((d,), dtype),
+    }
+
+
+def slstm_apply(p, x, ctx: QCtx, cfg: ModelConfig, *, state=None):
+    """Sequential sLSTM with exponential gating + stabiliser state.
+
+    state: (c, n, h, m) each (B, d).  Train: lax.scan over time (the input
+    GEMM is hoisted out of the scan and FQT-quantized; the tiny recurrent
+    matvec stays bf16).  Returns (y, new_state)."""
+    B, S, d = x.shape
+    gates_in = ctx.dense(x, p["w_gates"])                # (B,S,4d) quantized
+
+    if state is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        state = (c0, c0, c0, c0 - 10.0)
+
+    def step(carry, gin):
+        c, n, h, m = carry
+        pre = (gin.astype(jnp.float32) + p["b_gates"]
+               + ctx.dense_hp(h.astype(x.dtype), p["r_gates"]
+                              ).astype(jnp.float32))
+        z, i, f, o = jnp.split(pre, 4, axis=-1)
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        logf = jax.nn.log_sigmoid(f)
+        m_new = jnp.maximum(logf + m, i)                  # stabiliser
+        ip = jnp.exp(i - m_new)
+        fp = jnp.exp(logf + m - m_new)
+        c = fp * c + ip * z
+        n = fp * n + ip
+        h = o * (c / jnp.maximum(n, 1.0))
+        return (c, n, h, m_new), h
+
+    (c, n, h, m), hs = jax.lax.scan(step, state,
+                                    gates_in.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)                # (B,S,d)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    g = constrain(ctx.dense(y, p["w_ff_gate"]), "hidden")
+    u = constrain(ctx.dense(y, p["w_ff_up"]), "hidden")
+    y = ctx.dense(swiglu(g, u), p["w_ff_down"])
+    return y, (c, n, h, m)
+
+
+# ---- backbone ------------------------------------------------------------------
+
+
+def _is_slstm(cfg: ModelConfig, layer: int) -> bool:
+    return bool(cfg.slstm_every) and (layer + 1) % cfg.slstm_every == 0
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for l in range(cfg.n_layers):
+        if _is_slstm(cfg, l):
+            layers.append({"slstm": slstm_params(ks[l], cfg, dtype)})
+        else:
+            layers.append({"mlstm": mlstm_params(ks[l], cfg, dtype)})
+    return {
+        "embed": embed_init(ks[-3], cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": layers,
+        "ln": jnp.ones((cfg.n_layers, cfg.d_model), dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[-2], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    d_inner, H, P = _dims(cfg)
+    states = []
+    for l in range(cfg.n_layers):
+        if _is_slstm(cfg, l):
+            z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+            states.append((z, z, z, z - 10.0))
+        else:
+            states.append((jnp.zeros((batch, H, P, P), jnp.float32),
+                           jnp.zeros((batch, H, P), jnp.float32)))
+    return states
+
+
+def _backbone(params, cfg, qcfg, x, seed, *, states, remat=False,
+              chunk: int = 64):
+    """Python-loop over heterogeneous blocks (12 layers: HLO stays small)."""
+    new_states = []
+    for l, lp in enumerate(params["layers"]):
+        ctx = QCtx(qcfg, jnp.asarray(seed, jnp.uint32)
+                   + jnp.uint32(l) * _SEED_STRIDE)
+        st = states[l] if states is not None else None
+        x = constrain(x, "res")
+        xin = rmsnorm(x, params["ln"][l], cfg.norm_eps)
+
+        def block(xin, st, lp=lp, ctx=ctx):
+            if "slstm" in lp:
+                return slstm_apply(lp["slstm"], xin, ctx, cfg, state=st)
+            return mlstm_apply(lp["mlstm"], xin, ctx, cfg, state=st,
+                               chunk=chunk)
+
+        if remat and states is None:
+            block = jax.checkpoint(
+                block, policy=jax.checkpoint_policies.nothing_saveable)
+        y, ns = block(xin, st)
+        x = x + y
+        new_states.append(ns)
+    return x, new_states
+
+
+def forward(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, *, seed=0,
+            remat: bool = True, chunk: int = 64):
+    x = constrain(params["embed"][tokens], "res")
+    x, _ = _backbone(params, cfg, qcfg, x, seed, states=None, remat=remat,
+                     chunk=chunk)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    ctx = QCtx(qcfg if cfg.quantize_lm_head else QuantConfig(),
+               jnp.asarray(seed, jnp.uint32) + jnp.uint32(0xABCDEF))
+    return (constrain(ctx.dense(x, params["lm_head"]), "logits"),
+            jnp.zeros((), jnp.float32))
+
+
+def decode_step(params, cfg, qcfg, tokens, states, *, seed=0):
+    x = params["embed"][tokens]
+    x, new_states = _backbone(params, cfg, qcfg, x, seed, states=states)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    ctx = QCtx(qcfg if cfg.quantize_lm_head else QuantConfig(),
+               jnp.asarray(seed, jnp.uint32) + jnp.uint32(0xABCDEF))
+    return ctx.dense(x, params["lm_head"]), new_states
+
+
+def loss_fn(params, cfg, qcfg, batch, *, seed=0, remat=True, chunk=64):
+    tokens = batch["tokens"]
+    logits, _ = forward(params, cfg, qcfg, tokens[:, :-1], seed=seed,
+                        remat=remat, chunk=chunk)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, {"nll": loss, "aux": jnp.zeros((), jnp.float32)}

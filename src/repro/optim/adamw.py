@@ -1,0 +1,93 @@
+"""AdamW with FP32 master weights — the FQT training optimizer.
+
+The paper trains bf16 compute weights with a high-precision optimizer
+(standard FP8/FP4-FQT practice): the *forward* weights are bf16 (quantized to
+FP4 per GEMM), while the optimizer keeps FP32 master weights + moments and
+re-casts after each update.  Moment dtype is configurable (bf16 moments for
+the 405B memory budget — DESIGN.md §6).
+
+Implemented from scratch (no optax in this environment): pure-pytree,
+jit/pjit-friendly, with global-norm clipping and decoupled weight decay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: Any = jnp.float32     # bf16 for very large models
+    master_dtype: Any = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: Any        # fp32 master weights (pytree like params)
+    m: Any
+    v: Any
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    master = jax.tree.map(lambda p: p.astype(cfg.master_dtype), params)
+    m = jax.tree.map(lambda p: jnp.zeros_like(p, cfg.moment_dtype), params)
+    v = jax.tree.map(lambda p: jnp.zeros_like(p, cfg.moment_dtype), params)
+    return AdamWState(jnp.zeros((), jnp.int32), master, m, v)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def apply(grads, state: AdamWState, cfg: AdamWConfig, lr: jax.Array):
+    """One AdamW step.  Returns (new_bf16_params, new_state, metrics)."""
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    b1, b2 = cfg.betas
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, master, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * \
+            master.astype(jnp.float32)
+        new_master = master.astype(jnp.float32) - lr * delta
+        return (new_master.astype(cfg.master_dtype),
+                m32.astype(cfg.moment_dtype), v32.astype(cfg.moment_dtype))
+
+    out = jax.tree.map(upd, grads, state.master, state.m, state.v)
+    new_master = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    # compute-weight dtype follows the original param dtype (bf16 weights,
+    # f32 for the few full-precision leaves like SSM A_log / gate biases)
+    new_params = jax.tree.map(lambda mw, g: mw.astype(g.dtype),
+                              new_master, grads)
+    return new_params, AdamWState(step, new_master, new_m, new_v), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,41 @@
+"""LR schedules: linear warmup + cosine decay, and the paper's QAF re-warm
+(reset LR, 40-iteration warmup, cosine decay from a fresh peak — §5)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    # phase offset: the schedule is relative to this global step (the QAF
+    # re-warm starts its fresh warmup+cosine at the switch step)
+    start_step: int = 0
+
+
+def lr_at(step, cfg: ScheduleConfig):
+    """Warmup + cosine; step may be traced (relative to cfg.start_step)."""
+    step = jnp.maximum(jnp.asarray(step, jnp.float32) - cfg.start_step, 0.0)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    mincoef = cfg.min_lr_ratio
+    cos = cfg.peak_lr * (mincoef + (1 - mincoef)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def qaf_schedule(base: ScheduleConfig, qaf_steps: int,
+                 peak_scale: float = 0.5,
+                 start_step: int = 0) -> ScheduleConfig:
+    """The paper's QAF phase: fresh 40-step warmup + cosine over the QAF
+    budget, peak reset to a fraction of the pretrain peak."""
+    return ScheduleConfig(peak_lr=base.peak_lr * peak_scale,
+                          warmup_steps=min(40, max(qaf_steps // 4, 1)),
+                          total_steps=qaf_steps,
+                          min_lr_ratio=0.0, start_step=start_step)

@@ -1,0 +1,1 @@
+from repro.serve.engine import Engine, ServeConfig, serve_step_fn

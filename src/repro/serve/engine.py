@@ -1,0 +1,123 @@
+"""Batched serving engine: FP4 forward, prefill + decode with KV caches.
+
+The deployed artifact of the paper's pipeline is an *FP4-forward* model (the
+QAF phase keeps the forward path in FP4 precisely so the served model is
+FP4-inference-compatible).  The engine therefore runs every weight GEMM
+through the same NVFP4 RtN forward quantization used in training — serving
+is numerically identical to the training forward pass.
+
+Design (vLLM-style, reduced to the paper's needs):
+  * ``prefill``: one full-sequence pass that fills the caches (GQA KV with
+    optional SWA rolling buffers, SSM conv/state for hybrid/ssm families).
+  * ``decode_step``: one token for every active sequence (B, 1).
+  * static-shape batching: requests are padded into fixed (B, S) slots so
+    the two compiled programs cover the whole serving life cycle (TPU-
+    friendly: no recompilation; slots free as sequences hit EOS/max_len).
+  * sampling: greedy or temperature/top-k, PRNG-keyed per request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fqt
+from repro.models import registry
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_size: int = 8
+    max_len: int = 2048
+    temperature: float = 0.0      # 0 => greedy
+    top_k: int = 0                # 0 => no top-k filtering
+    eos_id: int = 2
+    seed: int = 0
+
+
+def _sample(logits: jax.Array, key, scfg: ServeConfig) -> jax.Array:
+    """logits: (B, V) -> (B,) int32."""
+    if scfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / scfg.temperature
+    if scfg.top_k > 0:
+        kth = jax.lax.top_k(logits, scfg.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+class Engine:
+    """Single-model serving engine over the uniform registry API."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 qcfg: Optional[fqt.QuantConfig] = None):
+        self.cfg, self.params, self.scfg = cfg, params, scfg
+        # serving default: the paper's FP4 forward (RtN), nothing else
+        self.qcfg = qcfg if qcfg is not None else fqt.qaf_config()
+
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+
+    # ---- compiled kernels --------------------------------------------------
+
+    def _prefill_impl(self, tokens, carry, extras):
+        return registry.prefill(self.params, self.cfg, self.qcfg, tokens,
+                                carry, extras=extras)
+
+    def _decode_impl(self, tokens, carry, key):
+        logits, carry = registry.decode_step(self.params, self.cfg,
+                                             self.qcfg, tokens[:, None],
+                                             carry)
+        nxt = _sample(logits[:, -1], key, self.scfg)
+        return nxt, carry
+
+    # ---- public API ----------------------------------------------------------
+
+    def generate(self, prompts: List[np.ndarray], max_new: int = 32,
+                 extras: Optional[dict] = None) -> List[np.ndarray]:
+        """Greedy/temperature generation for a batch of token prompts."""
+        scfg, cfg = self.scfg, self.cfg
+        B = len(prompts)
+        if B > scfg.batch_size:
+            raise ValueError(f"{B} prompts > batch_size {scfg.batch_size}")
+        # pad the batch to the fixed slot count
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((scfg.batch_size, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p       # left-pad (simplest static shape)
+        toks = jnp.asarray(toks)
+
+        carry = registry.make_decode_state(cfg, scfg.batch_size,
+                                           scfg.max_len)
+        extras = extras or {}
+        last_logits, carry = self._prefill(toks, carry, extras)
+
+        key = jax.random.PRNGKey(scfg.seed)
+        out = np.zeros((scfg.batch_size, max_new), np.int32)
+        done = np.zeros((scfg.batch_size,), bool)
+        nxt = _sample(last_logits, key, scfg)
+        for t in range(max_new):
+            out[:, t] = np.where(done, scfg.eos_id, np.asarray(nxt))
+            done |= np.asarray(nxt) == scfg.eos_id
+            if done.all():
+                out = out[:, : t + 1]
+                break
+            key, sub = jax.random.split(key)
+            nxt, carry = self._decode(jnp.asarray(out[:, t]), carry, sub)
+        return [out[i] for i in range(B)]
+
+
+def serve_step_fn(cfg: ModelConfig, qcfg: fqt.QuantConfig):
+    """The dry-run's ``serve_step``: one decode token against a full cache.
+
+    Returns f(params, tokens, carry) -> (logits, carry); tokens: (B, 1).
+    """
+
+    def serve_step(params, tokens, carry):
+        return registry.decode_step(params, cfg, qcfg, tokens, carry)
+
+    return serve_step

@@ -1,0 +1,3 @@
+from repro.train.step import (TrainConfig, TrainState, init_state,
+                              jit_train_step, make_train_step)
+from repro.train.trainer import Trainer, TrainerConfig

@@ -1,0 +1,159 @@
+"""Trainer: the fault-tolerant training loop.
+
+Production duties, scaled down to run on one host but structured for 1000+
+nodes (DESIGN.md §6):
+
+  * **checkpoint/restart** — atomic sharded checkpoints every
+    ``ckpt_every`` steps; on start, ``Trainer.run`` resumes from the latest
+    checkpoint (different mesh OK — elastic resharding in checkpoint/ckpt).
+    The data pipeline is step-indexed, so the resumed run consumes exactly
+    the token stream it would have seen.
+  * **straggler mitigation** — per-step wall-time is tracked against a
+    running median; a step slower than ``straggler_factor``× median is
+    recorded (on a real cluster the event triggers hot-spare swap /
+    re-slicing; the detection + accounting layer is what lives here).
+  * **QAF auto-switch** (the paper's §4→§5 pipeline) — when the
+    gradient-to-noise EMA crosses √3 (or at a fixed step), the trainer
+    re-builds the step function with the QAF QuantConfig (FP4 forward, BF16
+    backward) and re-warms the LR, continuing from the same state.
+  * **preemption safety** — SIGTERM sets a flag; the loop checkpoints and
+    exits cleanly at the next step boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core import fqt, qaf
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.config import ModelConfig
+from repro.optim import schedule
+from repro.train import step as step_mod
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    qaf: qaf.QAFConfig = dataclasses.field(default_factory=qaf.QAFConfig)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, qcfg: fqt.QuantConfig,
+                 tcfg: step_mod.TrainConfig, run_cfg: TrainerConfig,
+                 data_cfg: DataConfig, mesh=None):
+        self.cfg, self.qcfg, self.tcfg = cfg, qcfg, tcfg
+        self.run_cfg, self.data_cfg = run_cfg, data_cfg
+        self.mesh = mesh
+        self.data = SyntheticLM(data_cfg)
+        self.history: List[Dict[str, float]] = []
+        self.events: List[Dict[str, Any]] = []
+        self.in_qaf = False
+        self._stop = False
+        self._step_fn = None
+
+    # ---- lifecycle -------------------------------------------------------
+
+    def _install_sigterm(self):
+        try:
+            signal.signal(signal.SIGTERM, lambda *_: setattr(
+                self, "_stop", True))
+        except ValueError:
+            pass  # not on the main thread (tests)
+
+    def _build_step(self, start_step: int = 0):
+        qcfg = qaf.qaf_quant_config(self.qcfg) if self.in_qaf else self.qcfg
+        tcfg = self.tcfg
+        if self.in_qaf:
+            tcfg = dataclasses.replace(
+                tcfg, sched=qaf.qaf_lr_schedule(self.tcfg.sched,
+                                                self.run_cfg.qaf,
+                                                start_step))
+        self._step_fn = step_mod.make_train_step(self.cfg, qcfg, tcfg,
+                                                 self.mesh)
+        if self.mesh is not None:
+            self._step_fn = jax.jit(self._step_fn, donate_argnums=(0,))
+
+    def init_or_restore(self, key) -> step_mod.TrainState:
+        state = step_mod.init_state(self.cfg, self.tcfg, key)
+        if self.run_cfg.ckpt_dir:
+            step, restored = ckpt.restore_latest(self.run_cfg.ckpt_dir, state)
+            if restored is not None:
+                self.events.append({"kind": "restore", "step": int(step)})
+                return restored
+        return state
+
+    # ---- the loop --------------------------------------------------------
+
+    def run(self, key=None) -> step_mod.TrainState:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self._install_sigterm()
+        state = self.init_or_restore(key)
+        self._build_step()
+        start_step = int(state.step)
+        durations: List[float] = []
+
+        for step in range(start_step, self.run_cfg.total_steps):
+            if self._stop:
+                self.events.append({"kind": "preempt", "step": step})
+                break
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.data.batch(step).items()}
+
+            t0 = time.perf_counter()
+            state, metrics = self._step_fn(state, batch)
+            metrics = {k: float(v) for k, v in
+                       jax.device_get(metrics).items()}
+            dt = time.perf_counter() - t0
+
+            # straggler accounting (skip compile steps: first of each phase)
+            if len(durations) >= 5:
+                med = float(np.median(durations[-50:]))
+                if dt > self.run_cfg.straggler_factor * med:
+                    self.events.append({"kind": "straggler", "step": step,
+                                        "dt": dt, "median": med})
+            durations.append(dt)
+
+            metrics["step"] = step
+            metrics["dt"] = dt
+            self.history.append(metrics)
+
+            # QAF switch (paper §5): threshold crossing or fixed step
+            if not self.in_qaf and qaf.should_switch(
+                    step, metrics["thr_crossed"] > 0.5, self.run_cfg.qaf):
+                self.in_qaf = True
+                self.events.append({"kind": "qaf_switch", "step": step,
+                                    "gnr": metrics["gnr"]})
+                self._build_step(start_step=step + 1)
+
+            if (self.run_cfg.ckpt_dir
+                    and (step + 1) % self.run_cfg.ckpt_every == 0):
+                ckpt.save(self.run_cfg.ckpt_dir, step + 1, state,
+                          keep=self.run_cfg.keep_ckpts)
+
+        if self.run_cfg.ckpt_dir and (self._stop or True):
+            ckpt.save(self.run_cfg.ckpt_dir, int(state.step), state,
+                      keep=self.run_cfg.keep_ckpts)
+        return state
+
+    # ---- reporting -------------------------------------------------------
+
+    def summary(self) -> Dict[str, Any]:
+        h = self.history
+        return {
+            "steps": len(h),
+            "final_loss": h[-1]["loss"] if h else None,
+            "final_gnr": h[-1]["gnr"] if h else None,
+            "qaf": self.in_qaf,
+            "events": self.events,
+        }

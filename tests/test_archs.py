@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward/train step on CPU, asserting shapes + finiteness (assignment (f))."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import fqt
+from repro.models import registry
+
+QCFG = fqt.nvfp4_paper_config()
+BF16 = fqt.bf16_config()
+
+
+def _batch(cfg, B=2, S=32, key=0):
+    rng = np.random.default_rng(key)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_seq, cfg.d_model)), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vision_tokens, cfg.d_model)),
+            jnp.bfloat16)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def smoke_state():
+    """Cache (params, cfg) per arch across tests in this module."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch).smoke()
+            params = registry.init_params(cfg, jax.random.PRNGKey(0))
+            cache[arch] = (cfg, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_smoke(arch, smoke_state):
+    cfg, params = smoke_state(arch)
+    batch = _batch(cfg)
+    logits, aux = registry.forward(params, cfg, QCFG, batch, seed=1)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # padded vocab ids masked
+    if cfg.padded_vocab != cfg.vocab_size:
+        assert float(logits[..., cfg.vocab_size:].max()) < -1e29
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch, smoke_state):
+    """One FQT train step: loss + grads finite, grads nonzero."""
+    cfg, params = smoke_state(arch)
+    batch = _batch(cfg)
+
+    def loss(p):
+        l, _ = registry.loss_fn(p, cfg, QCFG, batch, seed=2)
+        return l
+
+    l, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l)) and float(l) > 0
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in flat)
+    gnorm = float(jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                               for g in flat)))
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ["tinyllama_1p1b", "mixtral_8x7b",
+                                  "zamba2_1p2b", "xlstm_125m",
+                                  "whisper_base", "internvl2_26b"])
+def test_decode_smoke(arch, smoke_state):
+    """One decode step against a pre-allocated cache/state (one per family)."""
+    cfg, params = smoke_state(arch)
+    B, CACHE = 2, 64
+    carry = registry.make_decode_state(cfg, B, CACHE)
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, carry2 = registry.decode_step(params, cfg, QCFG, tok, carry,
+                                          seed=3)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # second step advances
+    logits2, _ = registry.decode_step(params, cfg, QCFG, tok, carry2, seed=4)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+def test_fp4_vs_bf16_losses_close_at_init():
+    """FP4 quantization is a perturbation, not a rewrite: at init the FQT
+    loss should be within ~15%% of the bf16 loss (sanity on quant scale)."""
+    cfg = get_config("tinyllama_1p1b").smoke()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    l4, _ = registry.loss_fn(params, cfg, QCFG, batch, seed=0)
+    l16, _ = registry.loss_fn(params, cfg, BF16, batch, seed=0)
+    assert abs(float(l4) - float(l16)) / float(l16) < 0.15
+
+
+def test_swa_equals_full_attention_within_window():
+    """Mixtral SWA: with seq < window the result must equal full attention."""
+    import dataclasses
+    cfg = get_config("mixtral_8x7b").smoke()
+    cfg_full = dataclasses.replace(cfg, sliding_window=None)
+    params = registry.init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg, S=16)  # 16 < smoke window 64
+    l1, _ = registry.loss_fn(params, cfg, BF16, batch, seed=0)
+    l2, _ = registry.loss_fn(params, cfg_full, BF16, batch, seed=0)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)

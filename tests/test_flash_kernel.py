@@ -1,0 +1,63 @@
+"""Pallas flash-attention kernel vs the dense-softmax oracle: shape/dtype/
+mask sweeps in interpret mode (per-kernel allclose requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import flash_attention
+from repro.models.layers import attention_core
+
+
+def _qkv(B, S, H, KVH, D, dtype):
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KVH, D), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KVH, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 64, 2, 2, 16),      # MHA
+    (2, 128, 4, 2, 32),     # GQA group 2
+    (1, 128, 8, 2, 64),     # GQA group 4
+])
+@pytest.mark.parametrize("causal,window", [
+    (True, None), (True, 48), (False, None)])
+def test_flash_kernel_matches_oracle(shape, causal, window):
+    B, S, H, KVH, D = shape
+    q, k, v = _qkv(B, S, H, KVH, D, jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    ref = attention_core(q, k, v, qpos=pos, kpos=pos, causal=causal,
+                         window=window, chunk=4096)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_kv=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_kernel_bf16():
+    q, k, v = _qkv(1, 64, 2, 2, 32, jnp.bfloat16)
+    pos = jnp.arange(64, dtype=jnp.int32)
+    ref = attention_core(q, k, v, qpos=pos, kpos=pos, chunk=4096)
+    out = flash_attention(q, k, v, block_q=32, block_kv=32, interpret=True)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_kernel_block_shapes():
+    """Different VMEM tilings give identical results."""
+    q, k, v = _qkv(1, 128, 2, 2, 16, jnp.float32)
+    outs = [flash_attention(q, k, v, block_q=bq, block_kv=bk,
+                            interpret=True)
+            for bq, bk in ((32, 32), (64, 32), (32, 64), (128, 128))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_flash_kernel_rejects_bad_gqa():
+    q, k, v = _qkv(1, 64, 3, 2, 16, jnp.float32)
+    with pytest.raises(ValueError, match="GQA"):
+        flash_attention(q, k, v, interpret=True)

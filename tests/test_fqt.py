@@ -1,0 +1,178 @@
+"""Tests for the FQT custom_vjp matmul (the paper's six quantization points)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import fqt
+from repro.core.fqt import (QuantConfig, bf16_config, fp4_matmul, fqt_config,
+                            nvfp4_paper_config, qaf_config, tseng2025_config,
+                            wang2025_config, PAPER_SR_POINTS)
+from repro.core.quantize import NVFP4, fake_quant
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+
+def test_bf16_config_is_exact():
+    x, w = _rand((32, 64), 0), _rand((64, 48), 1)
+    y = fp4_matmul(x, w, cfg=bf16_config())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) @ np.asarray(w),
+                               rtol=1e-6)
+
+
+def test_forward_matches_manual_quantization():
+    """[Forward] z = Q_rtn(a) @ Q_rtn(W), blocks along K."""
+    x, w = _rand((32, 64), 2), _rand((64, 48), 3)
+    cfg = nvfp4_paper_config()
+    y = fp4_matmul(x, w, cfg=cfg, seed=jnp.uint32(7))
+    qx = fake_quant(x, cfg.fwd_a, axis=-1)
+    qw = fake_quant(w, cfg.fwd_w, axis=0)
+    expected = jnp.matmul(qx, qw, preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expected), rtol=1e-6)
+
+
+def test_forward_deterministic_rtn():
+    """Forward uses RtN only: independent of the SR seed."""
+    x, w = _rand((16, 32), 4), _rand((32, 32), 5)
+    cfg = nvfp4_paper_config()
+    y1 = fp4_matmul(x, w, cfg=cfg, seed=jnp.uint32(0))
+    y2 = fp4_matmul(x, w, cfg=cfg, seed=jnp.uint32(12345))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_backward_matches_manual_quantization():
+    """[Backward] dX = Q_sr(g) Q_rtn(W^T); [Update] dW = Q_sr(a^T) Q_sr(g)."""
+    x, w = _rand((32, 64), 6), _rand((64, 48), 7)
+    c = _rand((32, 48), 8)
+    cfg = nvfp4_paper_config()
+    seed = jnp.uint32(99)
+
+    def loss(x, w):
+        return jnp.sum(fp4_matmul(x, w, cfg=cfg, seed=seed) * c)
+
+    dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+
+    # manual replication with the same per-site SR streams
+    g = c
+    qg_b = fake_quant(g, cfg.bwd_g, axis=-1, u=fqt._site_u(seed, 2, g.shape))
+    qw_b = fake_quant(w, cfg.bwd_w, axis=1)
+    exp_dx = jnp.matmul(qg_b, qw_b.T, preferred_element_type=jnp.float32)
+    qx_u = fake_quant(x, cfg.upd_a, axis=0, u=fqt._site_u(seed, 4, x.shape))
+    qg_u = fake_quant(g, cfg.upd_g, axis=0, u=fqt._site_u(seed, 5, g.shape))
+    exp_dw = jnp.matmul(qx_u.T, qg_u, preferred_element_type=jnp.float32)
+
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(exp_dx), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(exp_dw), rtol=1e-6)
+
+
+def test_sr_seed_changes_backward_not_forward():
+    x, w = _rand((32, 32), 9), _rand((32, 32), 10)
+    cfg = nvfp4_paper_config()
+
+    def grads(seed):
+        def loss(x, w):
+            return jnp.sum(fp4_matmul(x, w, cfg=cfg, seed=seed) ** 2)
+        return jax.grad(loss, argnums=(0, 1))(x, w)
+
+    dx1, dw1 = grads(jnp.uint32(1))
+    dx2, dw2 = grads(jnp.uint32(2))
+    assert not np.array_equal(np.asarray(dw1), np.asarray(dw2))
+    assert not np.array_equal(np.asarray(dx1), np.asarray(dx2))
+    # same seed => bit-identical (replayable after restart)
+    dx1b, dw1b = grads(jnp.uint32(1))
+    np.testing.assert_array_equal(np.asarray(dw1), np.asarray(dw1b))
+
+
+def test_update_gemm_sr_unbiased():
+    """E[dW] under SR equals the dequantization-free dW up to fwd quant:
+    the core property that makes FP4 updates trainable (paper §4)."""
+    x, w = _rand((64, 16), 11, 0.5), _rand((16, 16), 12, 0.5)
+    c = _rand((64, 16), 13)
+    cfg = fqt_config(NVFP4)  # SR at paper points
+
+    def dw_for(seed):
+        def loss(x, w):
+            return jnp.sum(fp4_matmul(x, w, cfg=cfg, seed=seed) * c)
+        return jax.grad(loss, argnums=1)(x, w)
+
+    dws = jnp.stack([dw_for(jnp.uint32(i)) for i in range(64)])
+    mean_dw = jnp.mean(dws, axis=0)
+    exact_dw = jnp.asarray(np.asarray(x).T @ np.asarray(c))
+    # SR noise std per entry ~ gap*scale/sqrt(draws); tolerance ~ 5 sigma
+    resid = np.abs(np.asarray(mean_dw - exact_dw))
+    tol = 5 * float(jnp.std(dws, axis=0).max()) / np.sqrt(64) + 5e-3
+    assert resid.max() < tol + 0.15  # loose: fwd quant of x also perturbs dW
+
+
+def test_small_batch_update_fallback():
+    """M < block: update GEMM falls back to bf16 instead of failing."""
+    x, w = _rand((4, 32), 14), _rand((32, 32), 15)
+
+    def loss(x, w):
+        return jnp.sum(fp4_matmul(x, w, cfg=nvfp4_paper_config(),
+                                  seed=jnp.uint32(3)))
+    dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert np.isfinite(np.asarray(dx)).all() and np.isfinite(np.asarray(dw)).all()
+
+
+def test_batched_input_3d():
+    x = _rand((4, 16, 64), 16)
+    w = _rand((64, 32), 17)
+    cfg = nvfp4_paper_config()
+    y = fp4_matmul(x, w, cfg=cfg, seed=jnp.uint32(0))
+    assert y.shape == (4, 16, 32)
+    dx, dw = jax.grad(lambda x, w: jnp.sum(
+        fp4_matmul(x, w, cfg=cfg, seed=jnp.uint32(0)) ** 2),
+        argnums=(0, 1))(x, w)
+    assert dx.shape == x.shape and dw.shape == w.shape
+    assert np.isfinite(np.asarray(dx)).all()
+
+
+def test_jit_and_grad_compose():
+    x, w = _rand((32, 32), 18), _rand((32, 32), 19)
+    cfg = nvfp4_paper_config()
+
+    @jax.jit
+    def step(x, w, seed):
+        return jax.grad(lambda w: jnp.sum(
+            fp4_matmul(x, w, cfg=cfg, seed=seed) ** 2))(w)
+
+    g1 = step(x, w, jnp.uint32(5))
+    g2 = step(x, w, jnp.uint32(5))
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
+
+def test_presets_table2():
+    """Table 2: which GEMM operands each related work quantizes."""
+    ours = nvfp4_paper_config()
+    assert all(ours.spec(p) is not None for p in fqt.POINTS)
+    assert {p for p in fqt.POINTS if ours.spec(p).stochastic} == set(PAPER_SR_POINTS)
+
+    wang = wang2025_config()   # W/A only, grads BF16
+    assert wang.bwd_g is None and wang.upd_g is None and wang.upd_a is None
+    assert wang.fwd_w is not None and wang.fwd_a is not None
+
+    tseng = tseng2025_config()  # grads only (MXFP4+SR)
+    assert tseng.fwd_w is None and tseng.fwd_a is None
+    assert tseng.bwd_g.stochastic and tseng.bwd_g.scale_fmt == "e8m0"
+
+    qaf = qaf_config()          # FP4 fwd, BF16 bwd
+    assert qaf.fwd_w is not None and qaf.bwd_g is None and qaf.upd_g is None
+
+
+def test_bf16_weights_path_grad_exact():
+    """QAF config: backward grads equal the exact grads of the quantized fwd
+    (STE), since no backward/update quantization is applied."""
+    x, w = _rand((32, 32), 20), _rand((32, 32), 21)
+    cfg = qaf_config()
+    c = _rand((32, 32), 22)
+
+    dx, dw = jax.grad(lambda x, w: jnp.sum(
+        fp4_matmul(x, w, cfg=cfg) * c), argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(c) @ np.asarray(w).T,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(x).T @ np.asarray(c),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Lower+compile one cell and print the top collective/memory ops
+(hypothesis-forming tool for the §Perf loop).
+
+  PYTHONPATH=src python tools/diagnose_cell.py --arch codeqwen1.5-7b \
+      --shape train_4k [--moe-groups 16] [--act-mode sp]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+import argparse
+
+from repro.launch import hlo_cost
+from repro.launch.dryrun import run_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--qcfg", default="nvfp4")
+    ap.add_argument("--act-mode", default="sp")
+    ap.add_argument("--moe-groups", type=int, default=None)
+    ap.add_argument("--dump", default=None, help="write compiled HLO here")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    # reuse run_cell but keep the compiled text
+    import repro.launch.dryrun as dr
+    import repro.launch.specs as specs_mod
+    from repro.configs import get_config
+    from repro.core import fqt
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import SHAPES_BY_NAME
+    import dataclasses
+
+    cfg = get_config(args.arch)
+    if args.moe_groups is not None:
+        cfg = dataclasses.replace(cfg, moe_groups=args.moe_groups)
+    shape = SHAPES_BY_NAME[args.shape]
+    qcfg = {"nvfp4": fqt.nvfp4_paper_config, "bf16": fqt.bf16_config,
+            "qaf": fqt.qaf_config}[args.qcfg]()
+    mesh = make_production_mesh()
+    cell = specs_mod.build_cell(cfg, shape, mesh, qcfg=qcfg)
+    cell.act_mode = None if args.act_mode == "off" else args.act_mode
+    lowered = specs_mod.lower_cell(cell, mesh)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(text)
+    c = hlo_cost.analyze(text)
+    print(f"flops/dev {c.flops:.3e}  bytes/dev {c.bytes:.3e}  "
+          f"coll/dev {c.coll_bytes:.3e}")
+    print(f"terms: comp {c.flops/197e12:.2f}s  mem {c.bytes/819e9:.2f}s  "
+          f"coll {c.coll_bytes/50e9:.2f}s")
+    mem = compiled.memory_analysis()
+    print(f"temp/dev {mem.temp_size_in_bytes/2**30:.2f} GiB")
+    print("\ntop ops (bytes x trips):")
+    for nb, m, kind, typ, name in hlo_cost.top_ops(text, k=args.top):
+        print(f"  {nb/2**30:9.2f}GiB x{m:5.0f} {kind:18s} {typ:40s} {name}")
+
+
+if __name__ == "__main__":
+    main()

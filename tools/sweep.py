@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Parallel dry-run sweep driver: one subprocess per (arch × shape × mesh)
+cell (each sets XLA_FLAGS before jax import), N workers, JSON per cell.
+
+  python tools/sweep.py --out results/dryrun --workers 6
+  python tools/sweep.py --multi-pod --out results/dryrun
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+from concurrent.futures import ThreadPoolExecutor, as_completed
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARCHS = ["mixtral-8x7b", "qwen3-moe-235b-a22b", "whisper-base",
+         "internvl2-26b", "zamba2-1.2b", "qwen2.5-32b", "codeqwen1.5-7b",
+         "tinyllama-1.1b", "llama3-405b", "xlstm-125m"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run_one(arch, shape, args):
+    pod = "2pod" if args.multi_pod else "1pod"
+    name = f"{arch}__{shape}__{pod}__{args.qcfg}"
+    path = os.path.join(args.out, name + ".json")
+    if os.path.exists(path) and not args.force:
+        with open(path) as f:
+            return name, json.load(f).get("status"), "cached"
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--qcfg", args.qcfg, "--act-mode",
+           args.act_mode, "--out", args.out]
+    if args.multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    try:
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=args.timeout, env=env, cwd=ROOT)
+        ok = "ok" if r.returncode == 0 else "error"
+        tail = (r.stdout + r.stderr).strip().splitlines()
+        return name, ok, tail[-1][:200] if tail else ""
+    except subprocess.TimeoutExpired:
+        return name, "timeout", f">{args.timeout}s"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--workers", type=int, default=6)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--qcfg", default="nvfp4")
+    ap.add_argument("--act-mode", default="sp")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = [(a, s) for a in (
+        [args.arch] if args.arch else ARCHS) for s in (
+        [args.shape] if args.shape else SHAPES)]
+    failures = 0
+    with ThreadPoolExecutor(max_workers=args.workers) as ex:
+        futs = {ex.submit(run_one, a, s, args): (a, s) for a, s in cells}
+        for fut in as_completed(futs):
+            name, status, msg = fut.result()
+            print(f"{status:8s} {name}  {msg}", flush=True)
+            failures += status not in ("ok", "cached")
+    print(f"done; {failures} failures / {len(cells)} cells")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,7 +42,46 @@ def kernel_microbench(reps: int = 5):
     fq = jax.jit(lambda a, b: fqt.fp4_matmul(
         a, b, cfg=fqt.nvfp4_paper_config(), seed=jnp.uint32(1)))
     rows.append(("kernel_us", "fqt_fwd_matmul_1k", timeit(fq, x, w)))
+
+    # quantize-once packed weight: activation-only quantization per GEMM
+    from repro.core.quantize import NVFP4, pack_quantize
+    pw = pack_quantize(w, NVFP4, axis=-2)
+    pq = jax.jit(lambda a, pw: fqt.fp4_matmul(a, pw, cfg=fqt.qaf_config()))
+    rows.append(("kernel_us", "packed_fwd_matmul_1k", timeit(pq, x, pw)))
     return rows
+
+
+def serving_weight_store():
+    """Decode-path weight bytes: bf16 store vs quantize-once packed NVFP4.
+
+    The decode step is weight-bandwidth-bound; every generated token
+    streams the full weight store from HBM, so stored bytes/param IS the
+    bandwidth ratio of the serving hot loop."""
+    import jax
+    from repro.configs import get_config
+    from repro.core import fqt
+    from repro.models import registry
+    from repro.serve.packing import pack_model_params, weight_store_bytes
+
+    cfg = get_config("llama2-60m").smoke()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    packed = pack_model_params(cfg, params, fqt.qaf_config().fwd_w)
+    bf16 = weight_store_bytes(params)
+    pk = weight_store_bytes(packed)
+    from repro.core.quantize import PackedQuantizedTensor
+    import numpy as np
+    pleaves = [l for l in jax.tree_util.tree_leaves(
+        packed, is_leaf=lambda x: isinstance(x, PackedQuantizedTensor))
+        if isinstance(l, PackedQuantizedTensor)]
+    gemm_bytes = sum(l.nbytes() for l in pleaves)
+    gemm_params = sum(int(np.prod(l.shape)) for l in pleaves)
+    return [
+        ("serve_weight_bytes", "bf16_store", float(bf16)),
+        ("serve_weight_bytes", "packed_nvfp4_store", float(pk)),
+        ("serve_weight_bytes", "decode_traffic_ratio", bf16 / pk),
+        ("serve_weight_bytes", "packed_bytes_per_gemm_param",
+         gemm_bytes / gemm_params),
+    ]
 
 
 BENCHES = {
@@ -54,9 +93,10 @@ BENCHES = {
     "fig6": pf.fig6_fqt_vs_bf16,
     "table2": pf.table2_settings,
     "kernels": kernel_microbench,
+    "serve_weights": serving_weight_store,
 }
 
-QUICK = ("table2", "fig4", "kernels", "fig5", "fig6")
+QUICK = ("table2", "fig4", "kernels", "fig5", "fig6", "serve_weights")
 
 
 def main(argv=None) -> int:

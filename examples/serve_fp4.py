@@ -1,8 +1,13 @@
 """Batched FP4 serving: prefill + decode through the Engine.
 
 Serves a reduced tinyllama with the NVFP4 forward path (the deployed
-numeric configuration the paper's QAF phase preserves), compares greedy
-outputs against a bf16-forward engine, and reports decode throughput.
+numeric configuration the paper's QAF phase preserves).  The engine packs
+every GEMM weight ONCE into 4-bit NVFP4 storage at build (uint8 nibble
+codes + float8 block scales, ~0.56 bytes/param) — the decode loop streams
+packed weights instead of re-fake-quantizing bf16 each token, and the
+tokens are bit-identical to the fake-quant forward.  Compares greedy
+outputs against a bf16-forward engine and reports decode throughput plus
+the weight-store footprint.
 
   PYTHONPATH=src python examples/serve_fp4.py
 """
@@ -14,7 +19,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import fqt
 from repro.models import registry
-from repro.serve import Engine, ServeConfig
+from repro.serve import Engine, ServeConfig, weight_store_bytes
 
 cfg = get_config("tinyllama-1.1b").smoke()
 params = registry.init_params(cfg, jax.random.PRNGKey(0))
@@ -23,8 +28,14 @@ scfg = ServeConfig(batch_size=4, max_len=128, temperature=0.0)
 rng = np.random.default_rng(0)
 prompts = [rng.integers(0, cfg.vocab_size, 16) for _ in range(4)]
 
-fp4 = Engine(cfg, params, scfg)                        # NVFP4 RtN forward
+fp4 = Engine(cfg, params, scfg)          # NVFP4 forward, packed-once weights
 bf16 = Engine(cfg, params, scfg, qcfg=fqt.bf16_config())
+
+mb = 1024 * 1024
+print(f"weight store: bf16 {weight_store_bytes(bf16.params)/mb:.2f} MiB -> "
+      f"packed NVFP4 {weight_store_bytes(fp4.params)/mb:.2f} MiB "
+      f"({weight_store_bytes(bf16.params)/weight_store_bytes(fp4.params):.2f}"
+      "x less decode HBM traffic)")
 
 t0 = time.perf_counter()
 out_fp4 = fp4.generate(prompts, max_new=24)

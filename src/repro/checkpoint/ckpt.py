@@ -14,6 +14,11 @@ Properties required at scale (DESIGN.md §6):
     restore they are placed under *whatever sharding the new mesh dictates*,
     so a job can restart on a different topology (tested in
     tests/test_checkpoint.py).
+  * packed serving artifacts: a params tree packed with
+    ``serve.packing.pack_model_params`` saves/restores through the same
+    ``save``/``restore`` API (PackedQuantizedTensor is a registered pytree;
+    uint8 nibble codes and float8 scales round-trip via _VIEW_DTYPES), so
+    the exported serving checkpoint is 4-bit on disk.
 """
 from __future__ import annotations
 
@@ -25,6 +30,17 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# Dtypes np.savez cannot round-trip natively (it degrades them to void):
+# stored as a same-width unsigned-int view, dtype name recorded in meta.
+# Covers bf16 params and the packed-NVFP4 serving store (float8 block
+# scales ride next to uint8 nibble codes, keeping exported artifacts
+# 4-bit on disk).
+_VIEW_DTYPES = {
+    "bfloat16": np.uint16,
+    "float8_e4m3fn": np.uint8,
+    "float8_e5m2": np.uint8,
+}
 
 
 def _flatten(tree) -> Tuple[list, Any]:
@@ -46,12 +62,13 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
     meta_leaves = []
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
-        if arr.dtype == jnp.bfloat16:
-            arrays[f"leaf_{i}"] = arr.view(np.uint16)
-            meta_leaves.append({"dtype": "bfloat16"})
+        name = str(arr.dtype)
+        if name in _VIEW_DTYPES:
+            arrays[f"leaf_{i}"] = arr.view(_VIEW_DTYPES[name])
+            meta_leaves.append({"dtype": name})
         else:
             arrays[f"leaf_{i}"] = arr
-            meta_leaves.append({"dtype": str(arr.dtype)})
+            meta_leaves.append({"dtype": name})
     np.savez(os.path.join(tmp, "shard_0.npz"), **arrays)
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step, "n_leaves": len(leaves),
@@ -103,8 +120,9 @@ def restore(ckpt_dir: str, step: int, tree_like, *, shardings=None):
     out = []
     for i, (ref, shd) in enumerate(zip(leaves, shard_leaves)):
         arr = data[f"leaf_{i}"]
-        if meta["leaves"][i]["dtype"] == "bfloat16":
-            arr = arr.view(jnp.bfloat16)
+        dt = meta["leaves"][i]["dtype"]
+        if dt in _VIEW_DTYPES:
+            arr = arr.view(jnp.dtype(dt))
         if tuple(arr.shape) != tuple(np.shape(ref)):
             raise ValueError(f"leaf {i}: shape {arr.shape} != {np.shape(ref)}")
         if shd is not None:

@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantize import (BlockQuantSpec, NVFP4, MXFP4, fake_quant)
+from repro.core.quantize import (BlockQuantSpec, NVFP4, MXFP4, fake_quant,
+                                 PackedQuantizedTensor)
 
 # the six quantization points
 POINTS = ("fwd_w", "fwd_a", "bwd_w", "bwd_g", "upd_g", "upd_a")
@@ -240,6 +241,33 @@ def _bwd_rule(cfg, res, g):
 _fp4_matmul.defvjp(_fwd_rule, _bwd_rule)
 
 
+# ---- pre-quantized (packed) weights: the quantize-once serving path ----------
+
+
+def _packed_forward(x: jax.Array, w: PackedQuantizedTensor, seed: jax.Array,
+                    cfg: QuantConfig) -> jax.Array:
+    """[Forward] z = Q_rtn(a) @ dequant(w_packed): the weight was quantized
+    ONCE (Engine init / checkpoint export) so only the activation is
+    quantized per GEMM.  Bit-identical to ``_forward`` with ``fwd_w`` set —
+    ``PackedQuantizedTensor.dequant`` reconstructs exactly the fake-quant
+    grid values.  Inference-only (no custom_vjp; serving never backprops).
+    """
+    K, N = w.shape
+    fwd_a = _if_divisible(cfg.fwd_a, K)
+    if (cfg.impl == "pallas" and fwd_a is not None and w.axis == -2
+            and fwd_a.block == w.block):
+        from repro.kernels import ops as kops
+        rb = (_site_bits(x.shape, seed, 0).reshape(-1, K)
+              if fwd_a.stochastic else None)
+        x2 = x.reshape(-1, K)
+        y = kops.packed_block_matmul(x2, w, fwd_a, a_rbits=rb,
+                                     out_dtype=x.dtype)
+        return y.reshape(x.shape[:-1] + (N,))
+    qx = _maybe_q(x, fwd_a, axis=-1, seed=seed, site=0)
+    y = jnp.matmul(qx, w.dequant(), preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
 def fp4_matmul(x: jax.Array, w: jax.Array, *, cfg: QuantConfig,
                seed: Optional[jax.Array] = None) -> jax.Array:
     """FQT matmul  (..., K) @ (K, N) -> (..., N)  per the paper's scheme.
@@ -254,6 +282,8 @@ def fp4_matmul(x: jax.Array, w: jax.Array, *, cfg: QuantConfig,
         raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
     if seed is None:
         seed = jnp.zeros((), jnp.uint32)
+    if isinstance(w, PackedQuantizedTensor):
+        return _packed_forward(x, w, jnp.asarray(seed, jnp.uint32), cfg)
     if not cfg.enabled:
         return jnp.matmul(x, w,
                           preferred_element_type=jnp.float32).astype(x.dtype)

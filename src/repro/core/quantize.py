@@ -24,6 +24,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import formats
 from repro.core.formats import FloatFormat, get_format
@@ -154,22 +155,163 @@ def fake_quant(x: jax.Array, spec: BlockQuantSpec, *, axis: int = -1,
     return block_quantize(x, spec, axis=axis, key=key, u=u).dequant()
 
 
-# ---- packed storage (checkpoint / cache paths; not MXU operands) -------------
+# ---- packed storage (serving weight store / checkpoint / cache paths) --------
+
+# E2M1 magnitude grid, indexed by the 3 low nibble bits (matches the
+# ml_dtypes.float4_e2m1fn bit layout: s eem, codes 0..7 -> these values).
+_E2M1_GRID = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], np.float32)
 
 
 def pack_e2m1(codes: jax.Array) -> jax.Array:
-    """Pack E2M1 grid values into nibbles, two per uint8 (last axis even)."""
-    import ml_dtypes  # noqa: F401  (registers float4_e2m1fn)
-    fp4 = codes.astype(jnp.float4_e2m1fn)
-    bits = jax.lax.bitcast_convert_type(fp4, jnp.uint4).astype(jnp.uint8)
-    lo, hi = bits[..., 0::2], bits[..., 1::2]
+    """Pack E2M1 grid values into nibbles, two per uint8 (last axis even).
+
+    Arithmetic encode (no float4 dtype — jax<0.5 cannot hold float4 arrays):
+    nibble = sign<<3 | grid_index, the float4_e2m1fn bit layout.  ``codes``
+    must hold exact grid values (the quantizers' output), any float dtype.
+    """
+    if codes.shape[-1] % 2:
+        raise ValueError(f"last axis must be even to pack, got {codes.shape}")
+    absv = jnp.abs(codes).astype(jnp.float32)
+    idx = jnp.searchsorted(jnp.asarray(_E2M1_GRID), absv).astype(jnp.uint8)
+    sign = (codes.astype(jnp.float32) < 0).astype(jnp.uint8)
+    nib = (sign << 3) | idx
+    lo, hi = nib[..., 0::2], nib[..., 1::2]
     return lo | (hi << 4)
 
 
 def unpack_e2m1(packed: jax.Array, dtype=jnp.float32) -> jax.Array:
-    lo = (packed & 0xF).astype(jnp.uint4)
-    hi = (packed >> 4).astype(jnp.uint4)
-    stacked = jnp.stack([lo, hi], axis=-1)
+    """Inverse of ``pack_e2m1``: uint8 nibble pairs -> exact E2M1 grid values."""
+    lo = packed & 0x7
+    hi = (packed >> 4) & 0x7
+    mag = jnp.asarray(_E2M1_GRID)
+    vlo = mag[lo] * jnp.where(packed & 0x8, -1.0, 1.0)
+    vhi = mag[hi] * jnp.where(packed & 0x80, -1.0, 1.0)
+    stacked = jnp.stack([vlo, vhi], axis=-1)
     flat = stacked.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
-    fp4 = jax.lax.bitcast_convert_type(flat, jnp.float4_e2m1fn)
-    return fp4.astype(dtype)
+    return flat.astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedQuantizedTensor:
+    """Quantize-once packed NVFP4 storage: 4-bit codes + block scales.
+
+    The serving-side counterpart of ``QuantizedTensor``: E2M1 codes are
+    nibble-packed two-per-uint8 along the LAST axis (``packed``), the block
+    scales live in ``scales`` (float8_e4m3fn when the scale format is E4M3,
+    else the source dtype) and ``tscale`` is the per-tensor pow2 scale —
+    one per leading *batch* slice when the weight is a stacked layer/expert
+    array, so a scan/vmap slice of this pytree is exactly the per-matrix
+    quantization the fake-quant forward computes.
+
+    ``dequant()`` reproduces ``QuantizedTensor.dequant()`` BIT-EXACTLY (all
+    three factors are exactly representable in bf16 — see module docstring),
+    which is what keeps packed serving token-identical to the QAF forward.
+
+    ``axis`` is the blocking axis as a NEGATIVE index (so the same metadata
+    stays valid when leading batch dims are sliced away by scan/vmap).
+    """
+
+    packed: jax.Array          # uint8, shape = logical[:-1] + (last/2,)
+    scales: jax.Array          # logical shape with axis divided by block
+    tscale: jax.Array          # f32, shape = leading batch dims (or scalar)
+    axis: int                  # negative blocking-axis index
+    block: int
+    dtype_name: str = "bfloat16"     # dequant target dtype
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.dtype_name)
+
+    @property
+    def shape(self):
+        return self.packed.shape[:-1] + (self.packed.shape[-1] * 2,)
+
+    @property
+    def ndim(self) -> int:
+        return self.packed.ndim
+
+    def nbytes(self) -> int:
+        """Stored bytes (codes + scales + tscale)."""
+        return int(self.packed.size * self.packed.dtype.itemsize
+                   + self.scales.size * self.scales.dtype.itemsize
+                   + self.tscale.size * 4)
+
+    def dequant(self) -> jax.Array:
+        """codes * block_scales * tscale, bit-identical to the fake-quant
+        (QuantizedTensor) reconstruction of the same tensor."""
+        dt = self.dtype
+        codes = unpack_e2m1(self.packed, dtype=dt)
+        s = jnp.repeat(self.scales.astype(dt), self.block, axis=self.axis)
+        t = self.tscale.reshape(
+            self.tscale.shape + (1,) * (codes.ndim - self.tscale.ndim))
+        return (codes * s * t).astype(dt)
+
+
+jax.tree_util.register_dataclass(
+    PackedQuantizedTensor,
+    data_fields=["packed", "scales", "tscale"],
+    meta_fields=["axis", "block", "dtype_name"])
+
+
+def _pack_scales(scales: jax.Array, spec: BlockQuantSpec) -> jax.Array:
+    """Store E4M3 block scales in float8 (exact: they lie on the e4m3 grid);
+    other scale formats keep their source dtype."""
+    if spec.scale_fmt == "e4m3":
+        return scales.astype(jnp.float8_e4m3fn)
+    return scales
+
+
+def pack_quantized(qt: QuantizedTensor,
+                   spec: BlockQuantSpec = NVFP4) -> PackedQuantizedTensor:
+    """Convert a QuantizedTensor (dequantized-grid codes) to packed storage."""
+    if spec.data_fmt != "e2m1":
+        raise ValueError("packed storage is E2M1-only")
+    return PackedQuantizedTensor(
+        packed=pack_e2m1(qt.codes),
+        scales=_pack_scales(qt.scales, spec),
+        tscale=jnp.asarray(qt.tscale, jnp.float32),
+        axis=qt.axis - qt.codes.ndim,
+        block=qt.block,
+        dtype_name=jnp.dtype(qt.codes.dtype).name)
+
+
+def pack_quantize(x: jax.Array, spec: BlockQuantSpec = NVFP4, *,
+                  axis: int = -2, batch_dims: int = 0
+                  ) -> PackedQuantizedTensor:
+    """Quantize-once packing of a weight (RtN), optionally batched.
+
+    ``batch_dims`` leading axes are treated as independent tensors (stacked
+    layer / expert weights): the per-tensor pow2 scale is computed per slice,
+    so slicing the result along those axes (lax.scan / vmap) yields exactly
+    ``block_quantize(x[i], spec, axis=...)`` — the invariant that makes the
+    packed store bit-identical to the per-GEMM fake-quant forward.
+    """
+    if spec.data_fmt != "e2m1":
+        raise ValueError("packed storage is E2M1-only")
+    if spec.stochastic:
+        raise ValueError("packed weight store is RtN (forward) only")
+    nd = x.ndim
+    ax = _norm_axis(nd, axis)
+    if ax < batch_dims:
+        raise ValueError(f"blocking axis {ax} inside batch dims {batch_dims}")
+    orig_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    xb = _blocked(xf, ax, spec.block)                  # (..., nb, B, ...)
+    absmax = jnp.max(jnp.abs(xb), axis=ax + 1)         # (..., nb, ...)
+    tmax = jnp.max(jnp.abs(xf), axis=tuple(range(batch_dims, nd)))
+    # batch-shaped even for two_level=False (where _tensor_scale returns a
+    # scalar 1.0): every data field must carry the leading batch dims or
+    # lax.scan/vmap cannot slice the pytree
+    tscale = jnp.broadcast_to(_tensor_scale(tmax, spec), tmax.shape)
+    ts_b = tscale.reshape(tscale.shape + (1,) * (absmax.ndim - tscale.ndim))
+    scales = _block_scales(absmax, spec, ts_b)
+    denom = jnp.expand_dims(scales, ax + 1) * jnp.expand_dims(ts_b, ax + 1)
+    codes = formats.quantize(xb / denom, spec.data)
+    codes = codes.reshape(x.shape).astype(orig_dtype)
+    return PackedQuantizedTensor(
+        packed=pack_e2m1(codes),
+        scales=_pack_scales(scales.astype(orig_dtype), spec),
+        tscale=tscale.astype(jnp.float32),
+        axis=ax - nd,
+        block=spec.block,
+        dtype_name=jnp.dtype(orig_dtype).name)

@@ -1,1 +1,2 @@
-from repro.distributed import compression, pipeline, sharding
+from repro.distributed import compat, compression, pipeline, sharding
+from repro.distributed.compat import shard_map

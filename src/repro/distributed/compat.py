@@ -1,0 +1,44 @@
+"""JAX version compatibility shims for the distributed layer.
+
+``shard_map`` graduated from ``jax.experimental.shard_map.shard_map`` to
+``jax.shard_map`` (with ``axis_names=``/``check_vma=`` replacing the old
+``auto=``/``check_rep=`` parameters).  This module exposes one
+``shard_map`` callable with the NEW keyword surface that works on both:
+
+  * new JAX (has ``jax.shard_map``): passed through directly;
+  * old JAX (e.g. 0.4.x): falls back to
+    ``jax.experimental.shard_map.shard_map`` run fully manual.  The
+    partially-automatic form (``auto = mesh.axis_names - axis_names``)
+    lowers ``axis_index`` to a PartitionId op the 0.4.x SPMD partitioner
+    rejects at runtime, so the non-manual axes are made manual too: with
+    the specs used in this repo (P() on the auto axes) every device holds
+    the full per-shard array and the body's in-scope collectives are
+    unchanged — numerically identical, merely without GSPMD resharding
+    freedom *inside* the mapped body on old JAX (perf, not correctness).
+
+Use this everywhere instead of reaching for ``jax.shard_map`` so the repo
+runs on the full supported JAX range.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+_NEW = getattr(jax, "shard_map", None)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[frozenset] = None,
+              check_vma: bool = False):
+    """Version-portable shard_map; ``axis_names`` are the manual axes
+    (default: all mesh axes)."""
+    if _NEW is not None:
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        return _NEW(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_vma=check_vma, **kwargs)
+    from jax.experimental.shard_map import shard_map as _old
+    return _old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=bool(check_vma))

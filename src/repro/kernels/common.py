@@ -62,6 +62,33 @@ def uniform_from_bits_k(rbits: jax.Array) -> jax.Array:
     return (rbits >> 8).astype(jnp.float32) * jnp.float32(2.0 ** -24)
 
 
+def _decode_e2m1_nibble_k(nib: jax.Array) -> jax.Array:
+    """4-bit E2M1 code (s eem) -> float32 grid value, arithmetic only.
+
+    Normals (e>0): value = (1 + m/2) * 2^(e-1), built by assembling the f32
+    bit pattern directly (exponent field e-1+127, mantissa bit 22 = m) —
+    shifts + bitcast, the same toolbox as the rest of this module.
+    Subnormals (e==0): value = m * 0.5.
+    """
+    n = nib.astype(jnp.uint32)
+    sign = jnp.where((n & 0x8) != 0, jnp.float32(-1.0), jnp.float32(1.0))
+    e = (n >> 1) & 0x3
+    m = n & 0x1
+    vbits = (((e + jnp.uint32(126)) << 23) | (m << 22)).astype(jnp.uint32)
+    normal = jax.lax.bitcast_convert_type(vbits, jnp.float32)
+    mag = jnp.where(e == 0, m.astype(jnp.float32) * 0.5, normal)
+    return sign * mag
+
+
+def unpack_e2m1_k(packed: jax.Array) -> jax.Array:
+    """uint8 nibble pairs -> f32 E2M1 grid values, interleaved on the last
+    axis (inverse of quantize.pack_e2m1); usable inside Pallas kernels."""
+    lo = _decode_e2m1_nibble_k(packed & 0xF)
+    hi = _decode_e2m1_nibble_k(packed >> 4)
+    stacked = jnp.stack([lo, hi], axis=-1)
+    return stacked.reshape(packed.shape[:-1] + (packed.shape[-1] * 2,))
+
+
 def e8m0_block_scale_k(absmax: jax.Array, data_emax: int) -> jax.Array:
     """OCP MX rule: scale = 2^(floor(log2 amax) - emax_elem); 1.0 for amax=0."""
     bits = jax.lax.bitcast_convert_type(absmax, jnp.uint32)

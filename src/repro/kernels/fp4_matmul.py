@@ -129,8 +129,8 @@ def _quant_tile_along_first(x, rb, tscale, *, block, data_p, scale_p,
 
 
 def _fused_kernel(a_ref, b_ref, arb_ref, brb_ref, tsa_ref, tsb_ref, o_ref, *,
-                  block: int, data_p, scale_p, scale_is_e8m0,
-                  sr_a: bool, sr_b: bool, out_dtype):
+                  block: int, data_p_a, scale_p_a, e8m0_a, sr_a: bool,
+                  data_p_b, scale_p_b, e8m0_b, sr_b: bool):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -142,11 +142,11 @@ def _fused_kernel(a_ref, b_ref, arb_ref, brb_ref, tsa_ref, tsb_ref, o_ref, *,
     a = a_ref[...].astype(jnp.float32)            # (TM, TK) blocked along TK
     b = b_ref[...].astype(jnp.float32)            # (TK, TN) blocked along TK
     ad = _quant_tile_along_last(
-        a, arb_ref[...], tsa, block=block, data_p=data_p, scale_p=scale_p,
-        scale_is_e8m0=scale_is_e8m0, stochastic=sr_a)
+        a, arb_ref[...], tsa, block=block, data_p=data_p_a, scale_p=scale_p_a,
+        scale_is_e8m0=e8m0_a, stochastic=sr_a)
     bd = _quant_tile_along_first(
-        b, brb_ref[...], tsb, block=block, data_p=data_p, scale_p=scale_p,
-        scale_is_e8m0=scale_is_e8m0, stochastic=sr_b)
+        b, brb_ref[...], tsb, block=block, data_p=data_p_b, scale_p=scale_p_b,
+        scale_is_e8m0=e8m0_b, stochastic=sr_b)
     o_ref[...] += jnp.dot(ad, bd, preferred_element_type=jnp.float32) \
         * (tsa * tsb)
 
@@ -197,10 +197,13 @@ def fused_quant_matmul(a: jax.Array, b: jax.Array,
         return pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))
 
     kernel = functools.partial(
-        _fused_kernel, block=B, data_p=c.FmtParams.of(spec_a.data),
-        scale_p=c.FmtParams.of(spec_a.scale),
-        scale_is_e8m0=(spec_a.scale_fmt == "e8m0"),
-        sr_a=spec_a.stochastic, sr_b=spec_b.stochastic, out_dtype=out_dtype)
+        _fused_kernel, block=B,
+        data_p_a=c.FmtParams.of(spec_a.data),
+        scale_p_a=c.FmtParams.of(spec_a.scale),
+        e8m0_a=(spec_a.scale_fmt == "e8m0"), sr_a=spec_a.stochastic,
+        data_p_b=c.FmtParams.of(spec_b.data),
+        scale_p_b=c.FmtParams.of(spec_b.scale),
+        e8m0_b=(spec_b.scale_fmt == "e8m0"), sr_b=spec_b.stochastic)
 
     out = pl.pallas_call(
         kernel,
@@ -217,4 +220,105 @@ def fused_quant_matmul(a: jax.Array, b: jax.Array,
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         interpret=interpret,
     )(a, b, a_rbits, b_rbits, tsa, tsb)
+    return out.astype(out_dtype)
+
+
+# ---- packed weights: quantize-a on the fly x unpack-dequant-b ----------------
+
+
+def _packed_kernel(a_ref, bp_ref, bs_ref, arb_ref, tsa_ref, tsb_ref, o_ref, *,
+                   block: int, block_b: int, data_p_a, scale_p_a, e8m0_a,
+                   sr_a: bool):
+    """A tile is quantized in VREGs exactly as in ``_fused_kernel``; the B
+    tile arrives as nibble-packed E2M1 codes (half the bytes of an int8
+    operand, 1/4 of bf16) + float8 block scales, and is unpacked/dequantized
+    in VREGs — the decode-path weight stream out of HBM is ~4x smaller."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tsa = tsa_ref[0, 0]
+    tsb = tsb_ref[0, 0]
+    a = a_ref[...].astype(jnp.float32)            # (TM, TK) blocked along TK
+    ad = _quant_tile_along_last(
+        a, arb_ref[...], tsa, block=block, data_p=data_p_a,
+        scale_p=scale_p_a, scale_is_e8m0=e8m0_a, stochastic=sr_a)
+    bcodes = c.unpack_e2m1_k(bp_ref[...])         # (TK, TN) f32 grid values
+    bsc = bs_ref[...].astype(jnp.float32)         # (TK//block_b, TN)
+    tk, tn = bcodes.shape
+    nb = tk // block_b
+    bd = (bcodes.reshape(nb, block_b, tn) * bsc[:, None, :]).reshape(tk, tn)
+    o_ref[...] += jnp.dot(ad, bd, preferred_element_type=jnp.float32) \
+        * (tsa * tsb)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "spec_a", "block_b", "interpret", "tm", "tn", "tk", "out_dtype"))
+def packed_block_matmul(a: jax.Array, b_packed: jax.Array,
+                        b_scales: jax.Array, b_tscale: jax.Array,
+                        spec_a: BlockQuantSpec, *, block_b: int = 16,
+                        a_rbits: Optional[jax.Array] = None,
+                        out_dtype=jnp.float32, interpret: bool = False,
+                        tm: int = 128, tn: int = 256,
+                        tk: int = 512) -> jax.Array:
+    """Quantize-a x packed-b GEMM: the quantize-once serving hot path.
+
+    ``b_packed``: (K, N//2) uint8 nibble pairs (pack_e2m1 layout, packed
+    along N); ``b_scales``: (K//block_b, N) block scales (float8/bf16/f32);
+    ``b_tscale``: scalar pow2 tensor scale.  A is quantized on the fly with
+    ``spec_a`` (blocks along K), matching ``fused_quant_matmul``'s A side.
+
+    Default TN=256 keeps the packed tile's last dim at 128 lanes on TPU;
+    on the CPU backend the kernel runs in interpret mode like the others.
+    """
+    M, K = a.shape
+    K2, halfN = b_packed.shape
+    N = halfN * 2
+    assert K == K2, (a.shape, b_packed.shape)
+    B = spec_a.block
+    if K % B or K % block_b:
+        raise ValueError(f"K={K} not divisible by blocks {B}/{block_b}")
+
+    from repro.kernels.ref import tensor_scale_ref
+    tsa = tensor_scale_ref(a, spec_a).reshape(1, 1)
+    tsb = jnp.asarray(b_tscale, jnp.float32).reshape(1, 1)
+
+    dummy = jnp.zeros((1, 1), jnp.uint32)
+    if not spec_a.stochastic:
+        a_rbits = dummy
+    elif a_rbits is None or a_rbits.shape != a.shape:
+        raise ValueError("spec_a stochastic requires a_rbits of a.shape")
+
+    TM = _pick_tile(M, tm)
+    TN = _pick_tile(N, tn, 2)
+    TK = _pick_tile(K, tk, max(B, block_b))
+    grid = (M // TM, N // TN, K // TK)
+
+    kernel = functools.partial(
+        _packed_kernel, block=B, block_b=block_b,
+        data_p_a=c.FmtParams.of(spec_a.data),
+        scale_p_a=c.FmtParams.of(spec_a.scale),
+        e8m0_a=(spec_a.scale_fmt == "e8m0"), sr_a=spec_a.stochastic)
+
+    rb_spec = (pl.BlockSpec((TM, TK), lambda i, j, k: (i, k))
+               if spec_a.stochastic
+               else pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, TK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((TK, TN // 2), lambda i, j, k: (k, j)),
+            pl.BlockSpec((TK // block_b, TN), lambda i, j, k: (k, j)),
+            rb_spec,
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(a, b_packed, b_scales, a_rbits, tsa, tsb)
     return out.astype(out_dtype)

@@ -12,7 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import BlockQuantSpec
+from repro.core.quantize import BlockQuantSpec, PackedQuantizedTensor
 from repro.kernels import fp4_matmul as _mm
 from repro.kernels import nvfp4_quant as _q
 
@@ -50,3 +50,24 @@ def fused_quant_matmul(a, b, spec_a: BlockQuantSpec, spec_b: BlockQuantSpec, *,
     return _mm.fused_quant_matmul(a, b, spec_a, spec_b, a_rbits=a_rbits,
                                   b_rbits=b_rbits, out_dtype=out_dtype,
                                   interpret=interpret, tm=tm, tn=tn, tk=tk)
+
+
+def packed_block_matmul(a, w: PackedQuantizedTensor, spec_a: BlockQuantSpec,
+                        *, a_rbits=None, out_dtype=jnp.float32,
+                        interpret: Optional[bool] = None,
+                        tm: int = 128, tn: int = 256, tk: int = 512):
+    """Quantize-a x packed-NVFP4-b GEMM (the quantize-once serving path).
+
+    ``w`` holds nibble-packed codes along its last axis with blocks along
+    axis -2 (the contraction axis), i.e. the layout ``pack_quantize``
+    produces for a (K, N) weight.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if w.ndim != 2 or w.axis != -2:
+        raise ValueError(f"packed weight must be (K, N) blocked along K, got "
+                         f"shape {w.shape}, axis {w.axis}")
+    return _mm.packed_block_matmul(a, w.packed, w.scales, w.tscale, spec_a,
+                                   block_b=w.block, a_rbits=a_rbits,
+                                   out_dtype=out_dtype, interpret=interpret,
+                                   tm=tm, tn=tn, tk=tk)

@@ -1,1 +1,3 @@
+from repro.serve import packing
 from repro.serve.engine import Engine, ServeConfig, serve_step_fn
+from repro.serve.packing import pack_model_params, weight_store_bytes

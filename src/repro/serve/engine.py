@@ -14,6 +14,11 @@ Design (vLLM-style, reduced to the paper's needs):
     the two compiled programs cover the whole serving life cycle (TPU-
     friendly: no recompilation; slots free as sequences hit EOS/max_len).
   * sampling: greedy or temperature/top-k, PRNG-keyed per request.
+  * quantize-once packed weights: GEMM weights are packed to NVFP4 storage
+    (uint8 nibble codes + float8 block scales, ~0.56 bytes/param) at
+    engine build, so the bandwidth-bound decode path streams 4-bit weights
+    from HBM instead of re-fake-quantizing bf16 every token.  Bit-identical
+    tokens (serve/packing.py); disable with ``pack_weights=False``.
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ import numpy as np
 from repro.core import fqt
 from repro.models import registry
 from repro.models.config import ModelConfig
+from repro.serve import packing
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,10 +60,17 @@ class Engine:
     """Single-model serving engine over the uniform registry API."""
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
-                 qcfg: Optional[fqt.QuantConfig] = None):
-        self.cfg, self.params, self.scfg = cfg, params, scfg
+                 qcfg: Optional[fqt.QuantConfig] = None,
+                 pack_weights: bool = True):
+        self.cfg, self.scfg = cfg, scfg
         # serving default: the paper's FP4 forward (RtN), nothing else
         self.qcfg = qcfg if qcfg is not None else fqt.qaf_config()
+        if pack_weights and self.qcfg.fwd_w is not None:
+            # quantize ONCE: every GEMM weight becomes packed NVFP4 storage;
+            # the forward consumes it directly (fqt._packed_forward), token-
+            # identical to re-fake-quantizing per GEMM.
+            params = packing.pack_model_params(cfg, params, self.qcfg.fwd_w)
+        self.params = params
 
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))

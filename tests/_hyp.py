@@ -1,0 +1,113 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+This container has no network access, so ``hypothesis`` cannot be
+installed; without it four test modules fail at *collection*.  This shim
+provides the tiny subset the suite uses — ``given``, ``settings`` and the
+``integers`` / ``floats`` / ``sampled_from`` strategies — backed by fixed
+deterministic example sweeps: boundary values first (min, max, zero /
+midpoint), then seeded-PRNG draws, for exactly ``settings.max_examples``
+examples.  No shrinking, no database — a property failure reports the
+offending example in the assertion message like any parametrized test.
+
+Usage (the import-guard pattern in the test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hyp import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import types
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def example(self, i: int, rng: np.random.Generator):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = 0 if min_value is None else int(min_value)
+        self.hi = self.lo + 2 ** 31 - 1 if max_value is None \
+            else int(max_value)
+
+    def example(self, i, rng):
+        bounds = [self.lo, self.hi, (self.lo + self.hi) // 2]
+        if i < len(bounds):
+            return bounds[i]
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value=None, max_value=None, allow_nan=None,
+                 allow_infinity=None, width=None, **_ignored):
+        self.lo = -1e9 if min_value is None else float(min_value)
+        self.hi = 1e9 if max_value is None else float(max_value)
+
+    def example(self, i, rng):
+        bounds = [self.lo, self.hi]
+        if self.lo <= 0.0 <= self.hi:
+            bounds.append(0.0)
+        if i < len(bounds):
+            return bounds[i]
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, i, rng):
+        if i < len(self.elements):
+            return self.elements[i]
+        return self.elements[int(rng.integers(len(self.elements)))]
+
+
+class settings:  # noqa: N801 (mirrors the hypothesis API)
+    def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None,
+                 **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._hyp_max_examples = self.max_examples
+        return fn
+
+
+def given(*strats, **kwstrats):
+    """Run the test once per deterministic example (boundaries, then seeded
+    random draws).  Composes with @settings above or below it."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples",
+                        getattr(fn, "_hyp_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = np.random.default_rng(0xF9A11BAC)
+            for i in range(n):
+                pos = tuple(s.example(i, rng) for s in strats)
+                kw = {k: s.example(i, rng) for k, s in kwstrats.items()}
+                try:
+                    fn(*args, *pos, **kw, **kwargs)
+                except BaseException as e:
+                    e.args = (f"falsifying example #{i}: args={pos} "
+                              f"kwargs={kw}: {e.args[0] if e.args else e}",
+                              ) + e.args[1:]
+                    raise
+
+        # hide the example parameters from pytest's fixture resolution
+        # (functools.wraps exposes them via __wrapped__)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+strategies = types.SimpleNamespace(
+    integers=_Integers, floats=_Floats, sampled_from=_SampledFrom)

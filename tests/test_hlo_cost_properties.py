@@ -3,7 +3,10 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # offline container: deterministic shim
+    from _hyp import given, settings, strategies as st
 
 from repro.launch import hlo_cost
 

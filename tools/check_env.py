@@ -1,0 +1,61 @@
+"""Environment preflight: report versions and missing OPTIONAL deps.
+
+  PYTHONPATH=src python tools/check_env.py
+
+Prints one line per dependency so a red test run can be triaged at a
+glance instead of letting pytest collection explode on an ImportError.
+Optional deps have in-repo fallbacks (tests/_hyp.py for hypothesis);
+missing REQUIRED deps exit non-zero.
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+
+REQUIRED = ("jax", "jaxlib", "ml_dtypes", "numpy", "pytest")
+OPTIONAL = {
+    "hypothesis": "property tests fall back to tests/_hyp.py sweeps",
+}
+
+
+def _probe(name: str):
+    try:
+        mod = importlib.import_module(name)
+        return getattr(mod, "__version__", "?")
+    except ImportError:
+        return None
+
+
+def main() -> int:
+    print(f"python {sys.version.split()[0]}")
+    missing_required = []
+    for name in REQUIRED:
+        ver = _probe(name)
+        if ver is None:
+            missing_required.append(name)
+            print(f"MISSING  {name}  (required)")
+        else:
+            print(f"ok       {name} {ver}")
+    for name, fallback in OPTIONAL.items():
+        ver = _probe(name)
+        if ver is None:
+            print(f"absent   {name}  (optional; {fallback})")
+        else:
+            print(f"ok       {name} {ver}")
+    try:
+        import jax
+        print(f"backend  {jax.default_backend()} "
+              f"({len(jax.devices())} device(s))")
+        if _probe("jax") and not hasattr(jax, "shard_map"):
+            print("note     jax.shard_map absent -> "
+                  "repro.distributed.compat fallback in use")
+    except Exception as e:                                  # noqa: BLE001
+        print(f"backend  probe failed: {e}")
+    if missing_required:
+        print(f"FATAL: missing required deps: {missing_required}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -84,6 +84,76 @@ def serving_weight_store():
     ]
 
 
+def kv_cache_bench():
+    """Decode-attention cache traffic: bf16 vs block-quantized KV cache.
+
+    Long-context decode attention is bound by KV cache HBM reads (every
+    token streams the whole cache), so stored bytes/token IS the bandwidth
+    ratio of the attention term.  Reports bytes/token per format plus the
+    greedy-token agreement vs the bf16 cache on the smoke config."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core import fqt
+    from repro.models import registry
+
+    cfg = get_config("llama2-60m").smoke()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    qcfg = fqt.qaf_config()
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 12)), jnp.int32)
+    max_len, steps = 96, 24
+
+    def cache_bytes_per_token(fmt):
+        carry = registry.make_decode_state(cfg, 1, max_len,
+                                           kv_cache_format=fmt)
+        total = sum(int(l.size * l.dtype.itemsize)
+                    for l in jax.tree_util.tree_leaves(carry))
+        return total / max_len
+
+    # teacher-forced greedy agreement: both caches see the SAME token
+    # stream (the bf16 run's), so one early argmax flip on a near-flat
+    # random-init logit row cannot cascade — the per-step agreement is the
+    # bounded-divergence measure of the cache approximation itself.
+    def greedy_stream(fmt, forced=None):
+        """Decode `steps` greedy picks; with ``forced`` the next input is
+        the bf16 run's pick (teacher forcing), else the own pick."""
+        carry = registry.make_decode_state(cfg, 2, max_len,
+                                           kv_cache_format=fmt)
+        last, carry = registry.prefill(params, cfg, qcfg, toks, carry)
+        picks, lgs = [], []
+        tok = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
+        for t in range(steps):
+            logits, carry = registry.decode_step(params, cfg, qcfg, tok,
+                                                 carry)
+            pick = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            picks.append(np.asarray(pick))
+            lgs.append(np.asarray(logits[:, -1], np.float32))
+            tok = (pick if forced is None else forced[t])[:, None]
+        return np.stack(picks), np.stack(lgs)
+
+    rows, bpt = [], {}
+    for fmt in ("bf16", "nvfp4", "fp8"):
+        bpt[fmt] = cache_bytes_per_token(fmt)
+        rows.append(("kv_cache_bytes_per_token", fmt, bpt[fmt]))
+    # bf16 pass records the forced token stream + reference logits
+    ref_picks, ref_lgs = greedy_stream("bf16")
+    forced = [jnp.asarray(p) for p in ref_picks]
+    for fmt in ("nvfp4", "fp8"):
+        picks, lgs = greedy_stream(fmt, forced)
+        rows.append(("kv_cache_traffic_ratio", fmt,
+                     bpt["bf16"] / bpt[fmt]))
+        rows.append(("kv_cache_token_agreement_vs_bf16", fmt,
+                     float(np.mean(picks == ref_picks))))
+        # the bounded-divergence measure proper: relative logit error (the
+        # token flips above happen on near-tied random-init logit rows)
+        rows.append(("kv_cache_rel_logit_rmse", fmt,
+                     float(np.sqrt(np.mean((lgs - ref_lgs) ** 2))
+                           / np.sqrt(np.mean(ref_lgs ** 2)))))
+    return rows
+
+
 BENCHES = {
     "fig1": pf.fig1_scale_formats,
     "fig2": pf.fig2_block_sizes,
@@ -94,9 +164,11 @@ BENCHES = {
     "table2": pf.table2_settings,
     "kernels": kernel_microbench,
     "serve_weights": serving_weight_store,
+    "kv_cache": kv_cache_bench,
 }
 
-QUICK = ("table2", "fig4", "kernels", "fig5", "fig6", "serve_weights")
+QUICK = ("table2", "fig4", "kernels", "fig5", "fig6", "serve_weights",
+         "kv_cache")
 
 
 def main(argv=None) -> int:

@@ -275,6 +275,79 @@ def pack_quantized(qt: QuantizedTensor,
         dtype_name=jnp.dtype(qt.codes.dtype).name)
 
 
+# ---- KV-cache row quantization (serving decode path) -------------------------
+#
+# The decode-attention analogue of the packed weight store: cache rows are
+# block-quantized along the HEAD dim (the qk^T contraction axis, so score
+# tiles can dequantize K blocks in-register) with RtN — the paper's
+# inference-compatible forward rounding.  Unlike weights, cache slots are
+# written incrementally (prefill + one row per decoded token), so there is NO
+# per-tensor second-level scale: a global absmax over future tokens cannot be
+# known at append time.  Each block therefore carries a self-contained scale:
+#
+#   nvfp4:  E2M1 nibble codes (2/uint8) + one float8_e4m3fn scale per
+#           ``block`` elements      -> 0.5 + 1/16 = 0.5625 bytes/elem (3.56x)
+#   fp8:    float8_e4m3fn codes + one bf16 scale per ``block`` elements
+#                                   -> 1 + 2/16   = 1.125  bytes/elem (1.78x)
+#   bf16:   unquantized escape hatch (models/layers.KVCache).
+
+KV_CACHE_FORMATS = ("bf16", "nvfp4", "fp8")
+
+
+def kv_quant_rows(x: jax.Array, fmt: str, block: int = 16):
+    """Quantize cache rows along the last (head) dim.  Returns (codes, scales).
+
+    ``x``: (..., D) with D % block == 0.  RtN only (forward path).  Codes are
+    storage-dtype (uint8 nibble pairs for nvfp4, float8_e4m3fn for fp8);
+    scales have the last axis divided by ``block``.
+    """
+    if fmt not in ("nvfp4", "fp8"):
+        raise ValueError(f"kv_quant_rows: unknown format {fmt!r}")
+    e4m3 = get_format("e4m3")
+    xf = x.astype(jnp.float32)
+    xb = _blocked(xf, -1, block)                      # (..., nb, B)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)            # (..., nb)
+    if fmt == "nvfp4":
+        e2m1 = get_format("e2m1")
+        scales = formats.quantize_rtn(absmax / e2m1.max, e4m3)
+        scales = jnp.where(scales > 0, scales, 1.0)
+        codes = formats.quantize_rtn(xb / scales[..., None], e2m1)
+        return (pack_e2m1(codes.reshape(x.shape)),
+                scales.astype(jnp.float8_e4m3fn))
+    # fp8: scale each block into the e4m3 range; bf16 scale (rounded before
+    # use so the stored scale is exactly the one the codes were built with)
+    scales = jnp.where(absmax > 0, absmax / e4m3.max, 1.0
+                       ).astype(jnp.bfloat16)
+    codes = formats.quantize_rtn(
+        xb / scales.astype(jnp.float32)[..., None], e4m3)
+    return (codes.reshape(x.shape).astype(jnp.float8_e4m3fn),
+            scales)
+
+
+def kv_dequant(codes: jax.Array, scales: jax.Array, fmt: str,
+               block: int = 16, dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of ``kv_quant_rows``: reconstruct (..., D) rows in ``dtype``."""
+    if fmt == "nvfp4":
+        vals = unpack_e2m1(codes, dtype=jnp.float32)
+    elif fmt == "fp8":
+        vals = codes.astype(jnp.float32)
+    else:
+        raise ValueError(f"kv_dequant: unknown format {fmt!r}")
+    s = jnp.repeat(scales.astype(jnp.float32), block, axis=-1)
+    return (vals * s).astype(dtype)
+
+
+def kv_bytes_per_elem(fmt: str, block: int = 16) -> float:
+    """Stored cache bytes per logical K/V element for ``fmt``."""
+    if fmt == "bf16":
+        return 2.0
+    if fmt == "nvfp4":
+        return 0.5 + 1.0 / block
+    if fmt == "fp8":
+        return 1.0 + 2.0 / block
+    raise ValueError(f"unknown kv cache format {fmt!r}")
+
+
 def pack_quantize(x: jax.Array, spec: BlockQuantSpec = NVFP4, *,
                   axis: int = -2, batch_dims: int = 0
                   ) -> PackedQuantizedTensor:

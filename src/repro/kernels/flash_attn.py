@@ -33,6 +33,52 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _tile_run_predicate(q0, block_q: int, k0, block_kv: int, causal: bool,
+                        window: Optional[int]):
+    """Whether this kv tile can contribute at all (causal/window skip).
+    q0/k0: absolute position of the tile's first row/column."""
+    run = True
+    if causal:
+        run = jnp.asarray(k0 <= q0 + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(
+            run, jnp.asarray(k0 + block_kv - 1 > q0 - window))
+    return run
+
+
+def _tile_softmax_update(q, k, v, qpos, kpos, m_scr, l_scr, acc_scr, *,
+                         causal: bool, window: Optional[int], seq_k: int,
+                         v_store_dtype):
+    """One (block_q x block_kv) score-tile update of the running softmax.
+
+    q/k/v are f32 tiles already resident in VMEM/VREGs — for the packed
+    cache variant they were dequantized in-register just before this call,
+    so the bf16 cache never exists in HBM.
+    """
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)             # (bq, bk)
+    s = s * (q.shape[-1] ** -0.5)
+    mask = kpos < seq_k                                 # pad guard
+    if causal:
+        mask = jnp.logical_and(mask, kpos <= qpos)
+    if window is not None:
+        mask = jnp.logical_and(mask, kpos > qpos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1)
+    m_scr[...] = m_new
+    pv = jax.lax.dot_general(
+        p.astype(v_store_dtype).astype(jnp.float32), v,
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   block_q: int, block_kv: int, causal: bool,
                   window: Optional[int], seq_k: int):
@@ -47,52 +93,176 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     # absolute positions of this tile's rows/cols
-    q0 = qi * block_q
-    k0 = ki * block_kv
-    qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
-    kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    kpos = ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
 
     # skip fully-masked kv blocks (beyond causal frontier / before window)
-    run = True
-    if causal:
-        run = jnp.asarray(k0 <= q0 + block_q - 1)
-    if window is not None:
-        run = jnp.logical_and(
-            run, jnp.asarray(k0 + block_kv - 1 > q0 - window))
+    run = _tile_run_predicate(qi * block_q, block_q, ki * block_kv,
+                              block_kv, causal, window)
 
     @pl.when(run)
     def _step():
         q = q_ref[0, :, 0, :].astype(jnp.float32)       # (bq, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)         # (bq, bk)
-        s = s * (q.shape[-1] ** -0.5)
-        mask = kpos < seq_k                             # pad guard
-        if causal:
-            mask = jnp.logical_and(mask, kpos <= qpos)
-        if window is not None:
-            mask = jnp.logical_and(mask, kpos > qpos - window)
-        s = jnp.where(mask, s, NEG_INF)
-
-        m_prev = m_scr[...]
-        l_prev = l_scr[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-        corr = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new[:, None])
-        l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1)
-        m_scr[...] = m_new
-        pv = jax.lax.dot_general(
-            p.astype(v_ref.dtype).astype(jnp.float32), v,
-            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        _tile_softmax_update(q, k, v, qpos, kpos, m_scr, l_scr, acc_scr,
+                             causal=causal, window=window, seq_k=seq_k,
+                             v_store_dtype=v_ref.dtype)
 
     @pl.when(ki == nk - 1)
     def _finalize():
         denom = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0, :, 0, :] = (acc_scr[...] / denom[:, None]
                              ).astype(o_ref.dtype)
+
+
+# ---- packed (block-quantized) KV cache variant --------------------------------
+
+
+def _dequant_kv_tile(codes, scales, fmt: str, block: int) -> jax.Array:
+    """Dequantize one (bkv, D)-logical K/V tile in VREGs.
+
+    ``codes``: (bkv, D/2) uint8 nibble pairs (nvfp4) or (bkv, D) float8
+    (fp8); ``scales``: (bkv, D/block).  The bf16 cache never exists in HBM —
+    this runs after the tile load, before the score dot.
+    """
+    from repro.kernels import common as c
+    if fmt == "nvfp4":
+        vals = c.unpack_e2m1_k(codes)                   # (bkv, D) f32 grid
+    else:                                               # fp8
+        vals = codes.astype(jnp.float32)
+    bkv, D = vals.shape
+    nb = D // block
+    s = scales.astype(jnp.float32)                      # (bkv, nb)
+    return (vals.reshape(bkv, nb, block) * s[:, :, None]).reshape(bkv, D)
+
+
+def _flash_packed_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, pos_ref,
+                         o_ref, m_scr, l_scr, acc_scr, *, block_q: int,
+                         block_kv: int, causal: bool, window: Optional[int],
+                         fmt: str, block: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    # dynamic decode-state scalars (NOT compile-time constants: they advance
+    # every decoded token, so baking them in would recompile per step)
+    q_offset = pos_ref[0, 0]
+    seq_k = pos_ref[0, 1]                               # valid kv slots
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qpos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    kpos = ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+
+    run = _tile_run_predicate(q_offset + qi * block_q, block_q,
+                              ki * block_kv, block_kv, causal, window)
+
+    @pl.when(jnp.asarray(run))
+    def _step():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)       # (bq, D)
+        k = _dequant_kv_tile(kc_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+                             fmt, block)
+        v = _dequant_kv_tile(vc_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+                             fmt, block)
+        # p stays f32 into the pv dot: v was dequantized to f32 in-register,
+        # so there is no lower-precision operand to match (unlike the bf16
+        # cache kernel, where p is cast down to the cache dtype)
+        _tile_softmax_update(q, k, v, qpos, kpos, m_scr, l_scr, acc_scr,
+                             causal=causal, window=window, seq_k=seq_k,
+                             v_store_dtype=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom[:, None]
+                             ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "block", "causal", "window",
+                              "block_q", "block_kv", "interpret"))
+def flash_attention_packed(q: jax.Array, k_codes: jax.Array,
+                           k_scales: jax.Array, v_codes: jax.Array,
+                           v_scales: jax.Array, *, fmt: str = "nvfp4",
+                           block: int = 16, causal: bool = True,
+                           window: Optional[int] = None,
+                           kv_len=None, q_offset=0,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """Fused attention over a BLOCK-QUANTIZED KV cache.
+
+    q: (B, Sq, H, D) bf16/f32; k/v codes+scales: the ``PackedKVCache``
+    layout — nvfp4: (B, Sk, KVH, D/2) uint8 + (B, Sk, KVH, D/block)
+    float8_e4m3fn scales; fp8: (B, Sk, KVH, D) float8 codes + bf16 scales.
+    K/V tiles stream out of HBM at their packed width and are dequantized
+    in VREGs right before the qk^T / pv dots, so decode attention pays
+    0.5625 (nvfp4) or 1.125 (fp8) bytes/element of cache traffic instead
+    of 2.
+
+    ``q_offset``: absolute position of q row 0 (decode reads: cache length
+    - Sq); ``kv_len``: valid-slot count (defaults to Sk).  Both are
+    DYNAMIC scalars (int or traced) fed to the kernel as a (1, 2) operand
+    — they advance every decoded token, so one compiled program covers the
+    whole decode loop.  Oracle: ``ref.packed_attention_ref``
+    (dequantize-then-dense-softmax).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KVH, _ = k_codes.shape
+    if fmt not in ("nvfp4", "fp8"):
+        raise ValueError(f"unknown packed KV format {fmt!r}")
+    Dc = D // 2 if fmt == "nvfp4" else D
+    if k_codes.shape[-1] != Dc or D % block:
+        raise ValueError(f"bad packed layout: codes last dim "
+                         f"{k_codes.shape[-1]}, head dim {D}, block {block}")
+    if H % KVH:
+        raise ValueError(f"GQA: H={H} not a multiple of KVH={KVH}")
+    G = H // KVH
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Sk)
+    if Sq % bq or Sk % bkv:
+        raise ValueError(f"seq ({Sq},{Sk}) not divisible by blocks "
+                         f"({bq},{bkv})")
+    nb = D // block
+    grid = (B, H, Sq // bq, Sk // bkv)
+
+    kernel = functools.partial(
+        _flash_packed_kernel, block_q=bq, block_kv=bkv, causal=causal,
+        window=window, fmt=fmt, block=block)
+    pos = jnp.stack([jnp.asarray(q_offset, jnp.int32),
+                     jnp.asarray(Sk if kv_len is None else kv_len,
+                                 jnp.int32)]).reshape(1, 2)
+
+    kv_spec = pl.BlockSpec((1, bkv, 1, Dc),
+                           lambda b, h, qi, ki, G=G: (b, ki, h // G, 0))
+    sc_spec = pl.BlockSpec((1, bkv, 1, nb),
+                           lambda b, h, qi, ki, G=G: (b, ki, h // G, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            kv_spec, sc_spec, kv_spec, sc_spec,
+            pl.BlockSpec((1, 2), lambda b, h, qi, ki: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # m: running row max
+            pltpu.VMEM((bq,), jnp.float32),       # l: running denominator
+            pltpu.VMEM((bq, D), jnp.float32),     # acc: fp32 output tile
+        ],
+        interpret=interpret,
+    )(q, k_codes, k_scales, v_codes, v_scales, pos)
 
 
 @functools.partial(

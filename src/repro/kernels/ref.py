@@ -78,6 +78,35 @@ def block_matmul_ref(a_codes: jax.Array, a_scales: jax.Array,
     return out.astype(out_dtype)
 
 
+def packed_attention_ref(q: jax.Array, k_codes: jax.Array,
+                         k_scales: jax.Array, v_codes: jax.Array,
+                         v_scales: jax.Array, *, fmt: str = "nvfp4",
+                         block: int = 16, causal: bool = True,
+                         window: Optional[int] = None,
+                         kv_len: Optional[int] = None,
+                         q_offset: int = 0) -> jax.Array:
+    """Oracle for ``flash_attn.flash_attention_packed`` and the layers.py
+    packed decode read: dequantize the WHOLE cache, then dense softmax.
+
+    Mirrors the fused paths' semantics exactly (same RtN storage grid, same
+    masks); the fused implementations differ only in never materializing
+    the dequantized cache.
+    """
+    from repro.core.quantize import kv_dequant
+    from repro.models.layers import attention_core
+
+    B, Sq, H, D = q.shape
+    Sk = k_codes.shape[1]
+    k = kv_dequant(k_codes, k_scales, fmt, block, jnp.float32)
+    v = kv_dequant(v_codes, v_scales, fmt, block, jnp.float32)
+    qpos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    kpos = jnp.arange(Sk, dtype=jnp.int32)
+    kl = None if kv_len is None else jnp.asarray(kv_len, jnp.int32)
+    return attention_core(q.astype(jnp.float32), k, v, qpos=qpos, kpos=kpos,
+                          causal=causal, window=window, chunk=2 ** 30,
+                          kv_len=kl).astype(q.dtype)
+
+
 def fused_quant_matmul_ref(a: jax.Array, b: jax.Array, spec_a: BlockQuantSpec,
                            spec_b: BlockQuantSpec, *,
                            a_rbits: Optional[jax.Array] = None,

@@ -32,8 +32,14 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--kv-cache-format", default=None,
+                    choices=("bf16", "nvfp4", "fp8"),
+                    help="KV cache storage (nvfp4: 0.5625 bytes/elem; "
+                         "bf16: unquantized escape hatch).  Default: nvfp4, "
+                         "or bf16 when --bf16 is set")
     ap.add_argument("--bf16", action="store_true",
-                    help="serve in bf16 instead of FP4 forward")
+                    help="serve in bf16 instead of FP4 forward (also "
+                         "defaults the KV cache to bf16)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
 
@@ -47,8 +53,10 @@ def main(argv=None):
             params = restored
             print(f"restored step-{step} checkpoint")
 
+    kv_fmt = args.kv_cache_format or ("bf16" if args.bf16 else "nvfp4")
     scfg = ServeConfig(batch_size=args.batch, max_len=args.max_len,
-                       temperature=args.temperature)
+                       temperature=args.temperature,
+                       kv_cache_format=kv_fmt)
     qcfg = fqt.bf16_config() if args.bf16 else None
     eng = Engine(cfg, params, scfg, qcfg=qcfg)
 

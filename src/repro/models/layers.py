@@ -344,19 +344,149 @@ jax.tree_util.register_dataclass(
     KVCache, data_fields=["k", "v", "length"], meta_fields=[])
 
 
+@dataclasses.dataclass
+class PackedKVCache:
+    """Block-quantized per-layer KV cache (serving decode path).
+
+    K/V rows are quantized along the head dim at write time
+    (core/quantize.kv_quant_rows, RtN) and stored packed — uint8 E2M1
+    nibble pairs + float8 block scales for ``fmt="nvfp4"`` (0.5625
+    bytes/elem vs 2 for bf16), float8 codes + bf16 block scales for
+    ``fmt="fp8"`` (1.125 bytes/elem).  Decode attention dequantizes
+    blocks on the fly (``_attn_decode_packed`` / kernels.flash_attn's
+    packed kernel) so the bf16 cache is never materialized in HBM.
+    Same write semantics as ``KVCache`` (linear or SWA rolling buffer).
+    """
+
+    k_codes: jax.Array    # (B, S_buf, KVH, D/2) u8  | (B, S_buf, KVH, D) f8
+    k_scales: jax.Array   # (B, S_buf, KVH, D/block) f8e4m3 | bf16
+    v_codes: jax.Array
+    v_scales: jax.Array
+    length: jax.Array     # scalar int32: tokens written so far
+    fmt: str = "nvfp4"
+    block: int = 16
+
+    @staticmethod
+    def init(batch: int, buf: int, n_kv: int, hd: int, fmt: str = "nvfp4",
+             block: int = 16) -> "PackedKVCache":
+        if hd % block or hd % 2:
+            raise ValueError(
+                f"packed KV cache needs head_dim divisible by block={block} "
+                f"(and even), got head_dim={hd}")
+        if fmt == "nvfp4":
+            codes = jnp.zeros((batch, buf, n_kv, hd // 2), jnp.uint8)
+            scales = jnp.ones((batch, buf, n_kv, hd // block),
+                              jnp.float8_e4m3fn)
+        elif fmt == "fp8":
+            codes = jnp.zeros((batch, buf, n_kv, hd), jnp.float8_e4m3fn)
+            scales = jnp.ones((batch, buf, n_kv, hd // block), jnp.bfloat16)
+        else:
+            raise ValueError(f"unknown packed KV format {fmt!r}")
+        return PackedKVCache(codes, scales, jnp.copy(codes),
+                             jnp.copy(scales), jnp.zeros((), jnp.int32),
+                             fmt, block)
+
+    def dequant(self, dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+        """Full-cache (k, v) reconstruction — test oracle / fallback path."""
+        from repro.core.quantize import kv_dequant
+        return (kv_dequant(self.k_codes, self.k_scales, self.fmt,
+                           self.block, dtype),
+                kv_dequant(self.v_codes, self.v_scales, self.fmt,
+                           self.block, dtype))
+
+    def nbytes(self) -> int:
+        """Stored cache bytes (codes + scales, k and v)."""
+        return int(sum(a.size * a.dtype.itemsize for a in
+                       (self.k_codes, self.k_scales,
+                        self.v_codes, self.v_scales)))
+
+
+jax.tree_util.register_dataclass(
+    PackedKVCache,
+    data_fields=["k_codes", "k_scales", "v_codes", "v_scales", "length"],
+    meta_fields=["fmt", "block"])
+
+
+def make_kv_cache(batch: int, buf: int, n_kv: int, hd: int,
+                  dtype=jnp.bfloat16, kv_format: str = "bf16"):
+    """Cache-shape API: bf16 ``KVCache`` or block-quantized ``PackedKVCache``."""
+    if kv_format == "bf16":
+        return KVCache.init(batch, buf, n_kv, hd, dtype)
+    return PackedKVCache.init(batch, buf, n_kv, hd, fmt=kv_format)
+
+
+def _attn_decode_packed(q, cache: PackedKVCache, *, qpos, kpos, causal,
+                        window, kv_len, chunk: int = 1024) -> jax.Array:
+    """Decode attention over a packed cache: flash-style scan over kv chunks
+    with running (max, denom, acc) stats, dequantizing each chunk's K/V
+    blocks inside the scan body — only one chunk of bf16 K/V ever exists at
+    a time (the jnp mirror of the Pallas kernel's in-VMEM dequant).
+
+    q: (B, Sq, H, D) with Sq small (decode: 1); kpos: (S_buf,) absolute
+    positions held by each slot; kv_len: valid slot count.
+    """
+    from repro.core.quantize import kv_dequant
+    B, Sq, H, D = q.shape
+    KVH = cache.k_codes.shape[2]
+    G = H // KVH
+    buf = cache.k_codes.shape[1]
+    kc = chunk if buf % chunk == 0 else buf
+    nk = buf // kc
+    scale = D ** -0.5
+    qf = q.reshape(B, Sq, KVH, G, D).astype(jnp.float32)
+    if kv_len is not None:
+        kpos = jnp.where(jnp.arange(buf) < kv_len, kpos, jnp.int32(2 ** 30))
+
+    def chunked(a):
+        return a.reshape((B, nk, kc) + a.shape[2:]).swapaxes(0, 1)
+
+    kin = (chunked(cache.k_codes), chunked(cache.k_scales),
+           chunked(cache.v_codes), chunked(cache.v_scales),
+           kpos.reshape(nk, kc))
+
+    def kv_step(carry, xs):
+        m, l, acc = carry                                  # (B,KVH,G,Sq[,D])
+        kc_, ks_, vc_, vs_, kp = xs
+        ki = kv_dequant(kc_, ks_, cache.fmt, cache.block, jnp.float32)
+        vi = kv_dequant(vc_, vs_, cache.fmt, cache.block, jnp.float32)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, ki) * scale
+        mask = jnp.ones((Sq, kc), bool)
+        if causal:
+            mask &= kp[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kp[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vi)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KVH, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KVH, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KVH, G, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), kin)
+    o = acc / jnp.maximum(l, 1e-30)[..., None]             # (B,KVH,G,Sq,D)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)
+
+
 def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
                rope_theta: float, causal: bool = True,
                window: Optional[int] = None, chunk: int = 1024,
                positions: Optional[jax.Array] = None,
-               cache: Optional[KVCache] = None,
+               cache=None,
                xkv: Optional[jax.Array] = None,
                norm_eps: float = 1e-5, use_rope: bool = True):
     """Self- (or cross-, via xkv) attention with optional KV cache update.
 
-    Returns (out, new_cache).  With a cache, x is the *new* tokens
-    (decode: S=1; prefill: S=prompt) written at positions
-    [cache.length, cache.length + S).  For SWA the cache buffer is
-    min(window, S_buf) and written modulo buffer size (rolling).
+    Returns (out, new_cache).  With a cache (``KVCache`` or block-quantized
+    ``PackedKVCache``), x is the *new* tokens (decode: S=1; prefill:
+    S=prompt) written at positions [cache.length, cache.length + S).  For
+    SWA the cache buffer is min(window, S_buf) and written modulo buffer
+    size (rolling).  Packed caches quantize writes (RtN along the head dim)
+    and the decode read dequantizes blocks on the fly.
     """
     B, S, d = x.shape
     src = x if xkv is None else xkv
@@ -382,7 +512,8 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
 
     new_cache = None
     if cache is not None and xkv is None:
-        buf = cache.k.shape[1]
+        packed = isinstance(cache, PackedKVCache)
+        buf = (cache.k_codes if packed else cache.k).shape[1]
         start = cache.length % buf if window is not None else cache.length
         # rolling write (SWA) or linear write; S tokens, may wrap for SWA.
         # If more new tokens than buffer slots, only the last `buf` survive —
@@ -392,10 +523,21 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
             kw, vw, Sw = k[:, S - buf:], v[:, S - buf:], buf
             start = (cache.length + (S - buf)) % buf
         idx = (start + jnp.arange(Sw, dtype=jnp.int32)) % buf
-        ck = cache.k.at[:, idx].set(kw)
-        cv = cache.v.at[:, idx].set(vw)
         new_len = cache.length + S
-        new_cache = KVCache(ck, cv, new_len)
+        if packed:
+            from repro.core.quantize import kv_quant_rows
+            kcod, ksc = kv_quant_rows(kw, cache.fmt, cache.block)
+            vcod, vsc = kv_quant_rows(vw, cache.fmt, cache.block)
+            new_cache = PackedKVCache(
+                cache.k_codes.at[:, idx].set(kcod),
+                cache.k_scales.at[:, idx].set(ksc),
+                cache.v_codes.at[:, idx].set(vcod),
+                cache.v_scales.at[:, idx].set(vsc),
+                new_len, cache.fmt, cache.block)
+        else:
+            ck = cache.k.at[:, idx].set(kw)
+            cv = cache.v.at[:, idx].set(vw)
+            new_cache = KVCache(ck, cv, new_len)
         if S > 1:
             # Prefill (assumed from an empty cache): attend within the fresh
             # sequence directly — correct for SWA even when S > buf, since
@@ -413,9 +555,17 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
             else:
                 kpos = jnp.arange(buf, dtype=jnp.int32)
             kv_len = jnp.minimum(new_len, buf)
-            o = attention_core(q, ck, cv, qpos=positions, kpos=kpos,
-                               causal=causal, window=window, chunk=chunk,
-                               kv_len=kv_len)
+            if packed:
+                # dequantize-fused read: K/V blocks decode inside the score
+                # loop instead of materializing a bf16 cache first
+                o = _attn_decode_packed(q, new_cache, qpos=positions,
+                                        kpos=kpos, causal=causal,
+                                        window=window, kv_len=kv_len,
+                                        chunk=chunk)
+            else:
+                o = attention_core(q, ck, cv, qpos=positions, kpos=kpos,
+                                   causal=causal, window=window, chunk=chunk,
+                                   kv_len=kv_len)
     else:
         kpos = (positions if xkv is None
                 else jnp.arange(src.shape[1], dtype=jnp.int32))

@@ -23,8 +23,8 @@ import jax.numpy as jnp
 from repro.core.fqt import QuantConfig
 from repro.distributed.sharding import constrain
 from repro.models.config import ModelConfig
-from repro.models.layers import (KVCache, QCtx, attn_apply, attn_params,
-                                 dense_init, embed_init, mlp_params,
+from repro.models.layers import (QCtx, attn_apply, attn_params, dense_init,
+                                 embed_init, make_kv_cache, mlp_params,
                                  mlp_apply, rmsnorm)
 
 _SEED_STRIDE = jnp.uint32(0x9E3779B9)
@@ -274,8 +274,9 @@ def init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16):
-    return [KVCache.init(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype)
+               dtype=jnp.bfloat16, kv_format: str = "bf16"):
+    return [make_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype,
+                          kv_format)
             for _ in range(_n_attn(cfg))]
 
 

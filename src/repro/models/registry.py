@@ -72,20 +72,29 @@ def forward(params, cfg: ModelConfig, qcfg: QuantConfig, batch, *, seed=0,
 
 
 def make_decode_state(cfg: ModelConfig, batch: int, max_len: int,
-                      dtype=jnp.bfloat16):
+                      dtype=jnp.bfloat16, kv_cache_format: str = "bf16"):
     """Carry passed to decode_step; represents a cache filled to max_len
     capacity (dry-run shapes: the decode cell is 'one new token against a
-    seq_len-deep cache')."""
+    seq_len-deep cache').
+
+    ``kv_cache_format``: "bf16" (default), "nvfp4" or "fp8" — attention KV
+    caches are stored block-quantized along the head dim (PackedKVCache)
+    and dequantized on the fly by the decode read.  The ssm family has no
+    KV cache; its O(1) recurrent state always stays in high precision.
+    """
     if cfg.family in _TRANSFORMER_FAMILIES:
-        return transformer.init_cache(cfg, batch, max_len, dtype)
+        return transformer.init_cache(cfg, batch, max_len, dtype,
+                                      kv_cache_format)
     if cfg.family == "hybrid":
         return (mamba2.init_state(cfg, batch, dtype),
-                mamba2.init_cache(cfg, batch, max_len, dtype))
+                mamba2.init_cache(cfg, batch, max_len, dtype,
+                                  kv_cache_format))
     if cfg.family == "ssm":
         return xlstm.init_state(cfg, batch)
     if cfg.family == "encdec":
         enc_out = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), dtype)
-        return (enc_out, whisper.init_cache(cfg, batch, max_len, dtype))
+        return (enc_out, whisper.init_cache(cfg, batch, max_len, dtype,
+                                            kv_cache_format))
     raise ValueError(cfg.family)
 
 

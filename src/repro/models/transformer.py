@@ -17,8 +17,8 @@ from repro.core.fqt import QuantConfig
 from repro.distributed.sharding import constrain
 from repro.models import moe as moe_mod
 from repro.models.config import ModelConfig
-from repro.models.layers import (KVCache, QCtx, attn_apply, attn_params,
-                                 dense_init, embed_init, mlp_apply,
+from repro.models.layers import (QCtx, attn_apply, attn_params, dense_init,
+                                 embed_init, make_kv_cache, mlp_apply,
                                  mlp_params, rmsnorm)
 
 _SEED_STRIDE = jnp.uint32(0x9E3779B9)
@@ -132,12 +132,13 @@ def forward(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, *,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16):
+               dtype=jnp.bfloat16, kv_format: str = "bf16"):
     buf = max_len if cfg.sliding_window is None else min(
         max_len, cfg.sliding_window)
 
     def one(_):
-        return KVCache.init(batch, buf, cfg.n_kv_heads, cfg.hd, dtype)
+        return make_kv_cache(batch, buf, cfg.n_kv_heads, cfg.hd, dtype,
+                             kv_format)
 
     return jax.vmap(one)(jnp.arange(cfg.n_layers))
 

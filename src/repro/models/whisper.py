@@ -16,8 +16,8 @@ import jax.numpy as jnp
 from repro.core.fqt import QuantConfig
 from repro.distributed.sharding import constrain
 from repro.models.config import ModelConfig
-from repro.models.layers import (KVCache, QCtx, attn_apply, attn_params,
-                                 dense_init, embed_init, mlp_apply,
+from repro.models.layers import (QCtx, attn_apply, attn_params, dense_init,
+                                 embed_init, make_kv_cache, mlp_apply,
                                  mlp_params, rmsnorm)
 
 _SEED_STRIDE = jnp.uint32(0x9E3779B9)
@@ -143,9 +143,10 @@ def forward(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, *,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16):
+               dtype=jnp.bfloat16, kv_format: str = "bf16"):
     def one(_):
-        return KVCache.init(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype)
+        return make_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype,
+                             kv_format)
     return jax.vmap(one)(jnp.arange(cfg.n_layers))
 
 

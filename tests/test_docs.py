@@ -1,0 +1,40 @@
+"""Docs-drift guard (tier-1 fast test): README/docs code snippets must not
+drift from the code — import lines import, flags exist, paths resolve.
+
+The check itself lives in tools/check_env.py (``--docs`` mode) so it can
+also run standalone in CI / preflight.
+"""
+import os
+import sys
+
+_TOOLS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools")
+sys.path.insert(0, _TOOLS)
+import check_env  # noqa: E402
+
+
+def test_docs_pages_exist():
+    for rel in check_env.DOC_FILES:
+        assert os.path.exists(os.path.join(check_env.REPO_ROOT, rel)), rel
+
+
+def test_docs_snippets_in_sync(capsys):
+    assert check_env.check_docs() == 0, capsys.readouterr().out
+
+
+def test_docs_check_catches_drift():
+    """The guard must actually fail on stale flags/benches/paths/imports."""
+    errs = []
+    check_env._check_command("python -m repro.launch.serve --no-such-flag",
+                             errs, "t")
+    check_env._check_command("python -m benchmarks.run --bench nope",
+                             errs, "t")
+    check_env._check_command("python examples/no_such_example.py", errs, "t")
+    check_env._check_import_line("from repro.serve import NotAThing",
+                                 errs, "t")
+    assert len(errs) == 4, errs
+
+
+def test_check_env_deps_mode_still_works(capsys):
+    assert check_env.main([]) == 0
+    assert "python" in capsys.readouterr().out

@@ -1,21 +1,36 @@
-"""Environment preflight: report versions and missing OPTIONAL deps.
+"""Environment preflight + docs-drift guard.
 
-  PYTHONPATH=src python tools/check_env.py
+  PYTHONPATH=src python tools/check_env.py          # dependency report
+  PYTHONPATH=src python tools/check_env.py --docs   # docs snippet check
 
-Prints one line per dependency so a red test run can be triaged at a
-glance instead of letting pytest collection explode on an ImportError.
-Optional deps have in-repo fallbacks (tests/_hyp.py for hypothesis);
-missing REQUIRED deps exit non-zero.
+Default mode prints one line per dependency so a red test run can be
+triaged at a glance instead of letting pytest collection explode on an
+ImportError.  Optional deps have in-repo fallbacks (tests/_hyp.py for
+hypothesis); missing REQUIRED deps exit non-zero.
+
+``--docs`` scans README.md and docs/*.md fenced code blocks and verifies
+they have not drifted from the code: every ``import``/``from repro...``
+line must import (and every imported name must exist), every file path
+mentioned in a command must exist, every ``--flag`` of a quoted command
+must appear in the invoked module's source, and every ``--bench NAME``
+must be a registered benchmark.  Wired into tier-1 as a fast test
+(tests/test_docs.py).
 """
 from __future__ import annotations
 
 import importlib
+import os
+import re
 import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 REQUIRED = ("jax", "jaxlib", "ml_dtypes", "numpy", "pytest")
 OPTIONAL = {
     "hypothesis": "property tests fall back to tests/_hyp.py sweeps",
 }
+
+DOC_FILES = ("README.md", "docs/formats.md", "docs/serving.md")
 
 
 def _probe(name: str):
@@ -26,7 +41,127 @@ def _probe(name: str):
         return None
 
 
-def main() -> int:
+# ---- docs-drift check ---------------------------------------------------------
+
+
+def _fenced_blocks(text: str):
+    """Yield (lang, body) for every ``` fenced block."""
+    for m in re.finditer(r"```(\w*)\n(.*?)```", text, re.DOTALL):
+        yield m.group(1) or "", m.group(2)
+
+
+def _check_import_line(line: str, errors: list, where: str):
+    line = line.strip()
+    m = re.match(r"from\s+([\w.]+)\s+import\s+(.+)", line)
+    if m:
+        mod_name, names = m.group(1), m.group(2)
+        try:
+            mod = importlib.import_module(mod_name)
+        except Exception as e:                              # noqa: BLE001
+            errors.append(f"{where}: cannot import {mod_name}: {e}")
+            return
+        # tolerate parenthesized import lists (possibly split across lines)
+        names = names.split("#")[0].strip().strip("()\\,")
+        for name in re.split(r"\s*,\s*", names):
+            name = name.split(" as ")[0].strip().strip("()")
+            if name and not hasattr(mod, name):
+                errors.append(f"{where}: {mod_name} has no {name!r}")
+        return
+    m = re.match(r"import\s+([\w.]+)", line)
+    if m:
+        try:
+            importlib.import_module(m.group(1))
+        except Exception as e:                              # noqa: BLE001
+            errors.append(f"{where}: cannot import {m.group(1)}: {e}")
+
+
+def _module_source(modpath: str):
+    """Best-effort source file of ``python -m modpath`` within the repo."""
+    for base in ("src", "."):
+        cand = os.path.join(REPO_ROOT, base, *modpath.split(".")) + ".py"
+        if os.path.exists(cand):
+            return cand
+        pkg = os.path.join(REPO_ROOT, base, *modpath.split("."),
+                           "__main__.py")
+        if os.path.exists(pkg):
+            return pkg
+    return None
+
+
+def _check_command(cmd: str, errors: list, where: str):
+    """One shell command quoting this repo: paths, flags, bench names."""
+    toks = cmd.split()
+    src_file = None
+    if "-m" in toks and toks.index("-m") + 1 < len(toks):
+        modpath = toks[toks.index("-m") + 1]
+        if modpath != "pytest":
+            src_file = _module_source(modpath)
+            if src_file is None:
+                errors.append(f"{where}: module {modpath} not found")
+    for t in toks:
+        if re.fullmatch(r"[\w./-]+\.(py|md)", t):
+            if not os.path.exists(os.path.join(REPO_ROOT, t)):
+                errors.append(f"{where}: referenced file {t} missing")
+            elif t.endswith(".py") and src_file is None:
+                src_file = os.path.join(REPO_ROOT, t)
+    if src_file:
+        src = open(src_file).read()
+        for t in toks:
+            if t.startswith("--") and re.fullmatch(r"--[\w-]+", t):
+                if t not in src:
+                    errors.append(f"{where}: {os.path.relpath(src_file, REPO_ROOT)} "
+                                  f"does not define flag {t}")
+    if "--bench" in toks and toks.index("--bench") + 1 < len(toks):
+        bench = toks[toks.index("--bench") + 1]
+        sys.path.insert(0, REPO_ROOT)
+        try:
+            from benchmarks.run import BENCHES
+            if bench not in BENCHES:
+                errors.append(f"{where}: unknown bench {bench!r} "
+                              f"(have {sorted(BENCHES)})")
+        finally:
+            sys.path.pop(0)
+
+
+def check_docs() -> int:
+    """Verify README/docs code snippets against the code.  0 = no drift."""
+    errors = []
+    for rel in DOC_FILES:
+        path = os.path.join(REPO_ROOT, rel)
+        if not os.path.exists(path):
+            errors.append(f"{rel}: missing")
+            continue
+        text = open(path).read()
+        for lang, body in _fenced_blocks(text):
+            # join backslash-continued command lines
+            body = re.sub(r"\\\n\s*", " ", body)
+            for ln, line in enumerate(body.splitlines(), 1):
+                where = f"{rel} (block line {ln})"
+                if lang in ("python", "py", ""):
+                    if re.match(r"\s*(from|import)\s", line):
+                        _check_import_line(line, errors, where)
+                if lang in ("bash", "sh", "shell", ""):
+                    if re.search(r"\bpython3?\b", line):
+                        _check_command(line.strip(), errors, where)
+        # markdown links to local files must resolve
+        for m in re.finditer(r"\]\(([\w./-]+\.md)\)", text):
+            tgt = os.path.normpath(os.path.join(os.path.dirname(path),
+                                                m.group(1)))
+            if not os.path.exists(tgt):
+                errors.append(f"{rel}: broken link {m.group(1)}")
+    if errors:
+        for e in errors:
+            print(f"DRIFT    {e}")
+        print(f"FATAL: {len(errors)} docs drift error(s)")
+        return 1
+    print(f"ok       docs snippets in sync ({', '.join(DOC_FILES)})")
+    return 0
+
+
+# ---- dependency report --------------------------------------------------------
+
+
+def check_deps() -> int:
     print(f"python {sys.version.split()[0]}")
     missing_required = []
     for name in REQUIRED:
@@ -55,6 +190,13 @@ def main() -> int:
         print(f"FATAL: missing required deps: {missing_required}")
         return 1
     return 0
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if "--docs" in argv:
+        return check_docs()
+    return check_deps()
 
 
 if __name__ == "__main__":

@@ -46,8 +46,17 @@ def _tile_run_predicate(q0, block_q: int, k0, block_kv: int, causal: bool,
     return run
 
 
-def _tile_softmax_update(q, k, v, qpos, kpos, m_scr, l_scr, acc_scr, *,
-                         causal: bool, window: Optional[int], seq_k: int,
+def _tile_mask(qpos, kpos, valid, causal: bool, window: Optional[int]):
+    """Combine the pad/validity guard with causal + sliding-window masks."""
+    mask = valid
+    if causal:
+        mask = jnp.logical_and(mask, kpos <= qpos)
+    if window is not None:
+        mask = jnp.logical_and(mask, kpos > qpos - window)
+    return mask
+
+
+def _tile_softmax_update(q, k, v, mask, m_scr, l_scr, acc_scr, *,
                          v_store_dtype):
     """One (block_q x block_kv) score-tile update of the running softmax.
 
@@ -59,11 +68,6 @@ def _tile_softmax_update(q, k, v, qpos, kpos, m_scr, l_scr, acc_scr, *,
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)             # (bq, bk)
     s = s * (q.shape[-1] ** -0.5)
-    mask = kpos < seq_k                                 # pad guard
-    if causal:
-        mask = jnp.logical_and(mask, kpos <= qpos)
-    if window is not None:
-        mask = jnp.logical_and(mask, kpos > qpos - window)
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_scr[...]
@@ -107,8 +111,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         q = q_ref[0, :, 0, :].astype(jnp.float32)       # (bq, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
-        _tile_softmax_update(q, k, v, qpos, kpos, m_scr, l_scr, acc_scr,
-                             causal=causal, window=window, seq_k=seq_k,
+        mask = _tile_mask(qpos, kpos, kpos < seq_k, causal, window)
+        _tile_softmax_update(q, k, v, mask, m_scr, l_scr, acc_scr,
                              v_store_dtype=v_ref.dtype)
 
     @pl.when(ki == nk - 1)
@@ -126,9 +130,12 @@ def _dequant_kv_tile(codes, scales, fmt: str, block: int) -> jax.Array:
 
     ``codes``: (bkv, D/2) uint8 nibble pairs (nvfp4) or (bkv, D) float8
     (fp8); ``scales``: (bkv, D/block).  The bf16 cache never exists in HBM —
-    this runs after the tile load, before the score dot.
+    this runs after the tile load, before the score dot.  ``fmt="bf16"``
+    (the paged escape hatch) passes the tile through unscaled.
     """
     from repro.kernels import common as c
+    if fmt == "bf16":
+        return codes.astype(jnp.float32)
     if fmt == "nvfp4":
         vals = c.unpack_e2m1_k(codes)                   # (bkv, D) f32 grid
     else:                                               # fp8
@@ -176,8 +183,8 @@ def _flash_packed_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, pos_ref,
         # p stays f32 into the pv dot: v was dequantized to f32 in-register,
         # so there is no lower-precision operand to match (unlike the bf16
         # cache kernel, where p is cast down to the cache dtype)
-        _tile_softmax_update(q, k, v, qpos, kpos, m_scr, l_scr, acc_scr,
-                             causal=causal, window=window, seq_k=seq_k,
+        mask = _tile_mask(qpos, kpos, kpos < seq_k, causal, window)
+        _tile_softmax_update(q, k, v, mask, m_scr, l_scr, acc_scr,
                              v_store_dtype=jnp.float32)
 
     @pl.when(ki == nk - 1)
@@ -263,6 +270,157 @@ def flash_attention_packed(q: jax.Array, k_codes: jax.Array,
         ],
         interpret=interpret,
     )(q, k_codes, k_scales, v_codes, v_scales, pos)
+
+
+# ---- paged (continuous-batching) KV cache variant -----------------------------
+
+
+def _flash_paged_kernel(pt_ref, pos_ref, q_ref, kc_ref, ks_ref, vc_ref,
+                        vs_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                        block_q: int, page_size: int, buf: int, seq_q: int,
+                        causal: bool, window: Optional[int], fmt: str,
+                        block: int):
+    """Grid (B, H, nq, n_pages): one K/V PAGE per kv step, fetched through
+    the page table (the scalar-prefetch ref drives the BlockSpec index
+    maps, so each step DMAs exactly the physical page this slot's logical
+    page ``ki`` lives in).  Per-slot (q_offset, kv_len) come from the
+    second scalar-prefetch operand — vector state, one row per slot."""
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    q_offset = pos_ref[b, 0]
+    kv_len = pos_ref[b, 1]                              # min(length, buf)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qpos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, page_size), 0)
+    # logical slot j of this tile's columns -> absolute position held by it
+    j = ki * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, page_size), 1)
+    if window is None:
+        kpos = j                                        # linear: pos == slot
+    else:
+        # rolling (SWA): slot j holds the latest token with pos % buf == j
+        last = q_offset + seq_q - 1
+        kpos = last - ((last % buf - j) % buf)
+    valid = jnp.logical_and(j < kv_len, kpos >= 0)
+
+    # skip pages that are entirely beyond the valid slot count, and (for
+    # linear caches, where kpos is monotone in j) beyond the causal
+    # frontier / before the window
+    run = ki * page_size < kv_len
+    if window is None:
+        run = jnp.logical_and(
+            run, _tile_run_predicate(q_offset + qi * block_q, block_q,
+                                     ki * page_size, page_size, causal,
+                                     None))
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)       # (bq, D)
+        k = _dequant_kv_tile(kc_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+                             fmt, block)
+        v = _dequant_kv_tile(vc_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+                             fmt, block)
+        mask = _tile_mask(qpos, kpos, valid, causal, window)
+        _tile_softmax_update(q, k, v, mask, m_scr, l_scr, acc_scr,
+                             v_store_dtype=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom[:, None]
+                             ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "block", "causal", "window",
+                              "block_q", "interpret"))
+def flash_attention_paged(q: jax.Array, k_codes: jax.Array,
+                          k_scales: jax.Array, v_codes: jax.Array,
+                          v_scales: jax.Array, page_table: jax.Array,
+                          lengths: jax.Array, q_offsets: jax.Array, *,
+                          fmt: str = "nvfp4", block: int = 16,
+                          causal: bool = True,
+                          window: Optional[int] = None,
+                          block_q: int = 128,
+                          interpret: bool = False) -> jax.Array:
+    """Fused attention over a PAGED block-quantized KV cache (continuous
+    batching): K/V tiles are gathered one physical page at a time through
+    ``page_table`` and every slot carries its own (q_offset, kv_len) —
+    the per-slot vector operands that replace the shared decode scalars.
+
+    q: (B, Sq, H, D); codes/scales: the ``PagedKVCache`` page POOL layout —
+    (P, page, KVH, D/2) uint8 + (P, page, KVH, D/block) f8 scales (nvfp4),
+    (P, page, KVH, D) f8 codes + bf16 scales (fp8), or (P, page, KVH, D)
+    bf16 codes (the escape hatch, scales ignored).  ``page_table``:
+    (B, n_pages) int32 physical page per logical page; ``lengths``: (B,)
+    valid tokens per slot; ``q_offsets``: (B,) absolute position of each
+    slot's q row 0.  The kv block size IS the page size (one page per
+    grid step; hardware wants >= 128-token pages — ROADMAP).  Oracle:
+    ``ref.paged_attention_ref``.
+    """
+    B, Sq, H, D = q.shape
+    P, psz, KVH, Dc = k_codes.shape
+    if fmt not in ("nvfp4", "fp8", "bf16"):
+        raise ValueError(f"unknown paged KV format {fmt!r}")
+    want_dc = D // 2 if fmt == "nvfp4" else D
+    if Dc != want_dc or D % block:
+        raise ValueError(f"bad paged layout: codes last dim {Dc}, head dim "
+                         f"{D}, block {block}")
+    if H % KVH:
+        raise ValueError(f"GQA: H={H} not a multiple of KVH={KVH}")
+    G = H // KVH
+    bq = min(block_q, Sq)
+    if Sq % bq:
+        raise ValueError(f"seq {Sq} not divisible by block_q {bq}")
+    n_pages = page_table.shape[1]
+    buf = n_pages * psz
+    nb = k_scales.shape[-1]
+    grid = (B, H, Sq // bq, n_pages)
+
+    kernel = functools.partial(
+        _flash_paged_kernel, block_q=bq, page_size=psz, buf=buf, seq_q=Sq,
+        causal=causal, window=window, fmt=fmt, block=block)
+    pos = jnp.stack([jnp.asarray(q_offsets, jnp.int32),
+                     jnp.asarray(lengths, jnp.int32)], axis=1)   # (B, 2)
+
+    kv_spec = pl.BlockSpec(
+        (1, psz, 1, Dc),
+        lambda b, h, qi, ki, pt, pos_: (pt[b, ki], 0, h // G, 0))
+    sc_spec = pl.BlockSpec(
+        (1, psz, 1, nb),
+        lambda b, h, qi, ki, pt, pos_: (pt[b, ki], 0, h // G, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # page_table, (q_offset, kv_len)
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D),
+                         lambda b, h, qi, ki, pt, pos_: (b, qi, h, 0)),
+            kv_spec, sc_spec, kv_spec, sc_spec,
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D),
+                               lambda b, h, qi, ki, pt, pos_: (b, qi, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # m: running row max
+            pltpu.VMEM((bq,), jnp.float32),       # l: running denominator
+            pltpu.VMEM((bq, D), jnp.float32),     # acc: fp32 output tile
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(page_table, jnp.int32), pos,
+      q, k_codes, k_scales, v_codes, v_scales)
 
 
 @functools.partial(

@@ -107,6 +107,57 @@ def packed_attention_ref(q: jax.Array, k_codes: jax.Array,
                           kv_len=kl).astype(q.dtype)
 
 
+def paged_attention_ref(q: jax.Array, k_codes: jax.Array,
+                        k_scales: jax.Array, v_codes: jax.Array,
+                        v_scales: jax.Array, page_table, lengths,
+                        q_offsets, *, fmt: str = "nvfp4", block: int = 16,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """Oracle for ``flash_attn.flash_attention_paged`` and the layers.py
+    paged decode read: gather every slot's logical buffer through the page
+    table, dequantize the WHOLE cache, then run dense softmax PER SLOT
+    with that slot's own (q_offset, kv_len).
+
+    q: (B, Sq, H, D); codes/scales: the page-POOL layout (P, page, KVH, ·);
+    page_table: (B, n_pages); lengths/q_offsets: (B,).  Mirrors the fused
+    paths' semantics exactly (same storage grid, same rolling-slot
+    position rule); the fused implementations differ only in never
+    materializing the gathered/dequantized cache.
+    """
+    from repro.models.layers import (_kv_dequant_any, attention_core,
+                                     swa_kpos)
+
+    B, Sq, H, D = q.shape
+    psz = k_codes.shape[1]
+    pt = jnp.asarray(page_table, jnp.int32)
+    buf = pt.shape[1] * psz
+
+    def gather(pool):
+        a = pool[pt]                           # (B, n_pages, page, KVH, ·)
+        return a.reshape((B, buf) + pool.shape[2:])
+
+    k = _kv_dequant_any(gather(k_codes), gather(k_scales), fmt, block,
+                        jnp.float32)
+    v = _kv_dequant_any(gather(v_codes), gather(v_scales), fmt, block,
+                        jnp.float32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    q_offsets = jnp.asarray(q_offsets, jnp.int32)
+    outs = []
+    for i in range(B):                         # per-slot dense attention
+        qpos = q_offsets[i] + jnp.arange(Sq, dtype=jnp.int32)
+        if window is None:
+            kpos = jnp.arange(buf, dtype=jnp.int32)
+        else:
+            kpos = swa_kpos((q_offsets[i] + Sq)[None], buf)[0]
+            kpos = jnp.where(kpos >= 0, kpos, jnp.int32(2 ** 30))
+        kv_len = jnp.minimum(lengths[i], buf)
+        outs.append(attention_core(
+            q[i:i + 1].astype(jnp.float32), k[i:i + 1], v[i:i + 1],
+            qpos=qpos, kpos=kpos, causal=causal, window=window,
+            chunk=2 ** 30, kv_len=kv_len))
+    return jnp.concatenate(outs, axis=0).astype(q.dtype)
+
+
 def fused_quant_matmul_ref(a: jax.Array, b: jax.Array, spec_a: BlockQuantSpec,
                            spec_b: BlockQuantSpec, *,
                            a_rbits: Optional[jax.Array] = None,

@@ -3,10 +3,17 @@
   python -m repro.launch.serve --arch tinyllama-1.1b --smoke \\
       --batch 4 --max-new 32
 
+  # continuous batching: 12 queued requests over 4 slots, 16-token pages
+  python -m repro.launch.serve --arch tinyllama-1.1b --smoke \\
+      --queue 12 --max-slots 4 --page-size 16
+
 Initializes (or restores ``--ckpt-dir``) parameters, builds the Engine and
-runs a batch of synthetic prompts through prefill + decode, reporting
-tokens/s.  The forward GEMMs run in NVFP4 RtN — the exact deployed numeric
-path the paper's QAF phase preserves.
+runs synthetic prompts through prefill + decode, reporting tokens/s.  With
+``--queue`` the ContinuousEngine serves a staggered arrival trace through
+the scheduler (admission queue, paged NVFP4 KV cache, slot reuse); without
+it the lockstep Engine serves one static batch.  The forward GEMMs run in
+NVFP4 RtN — the exact deployed numeric path the paper's QAF phase
+preserves.
 """
 from __future__ import annotations
 
@@ -20,7 +27,7 @@ from repro.checkpoint import ckpt
 from repro.configs import get_config
 from repro.core import fqt
 from repro.models import registry
-from repro.serve import Engine, ServeConfig
+from repro.serve import ContinuousEngine, Engine, Request, ServeConfig
 
 
 def main(argv=None):
@@ -40,6 +47,14 @@ def main(argv=None):
     ap.add_argument("--bf16", action="store_true",
                     help="serve in bf16 instead of FP4 forward (also "
                          "defaults the KV cache to bf16)")
+    ap.add_argument("--queue", type=int, default=0,
+                    help="serve N queued requests through the continuous-"
+                         "batching engine (staggered synthetic arrivals); "
+                         "0 = lockstep batch")
+    ap.add_argument("--max-slots", type=int, default=None,
+                    help="continuous engine decode slots (default: --batch)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged cache pool)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
 
@@ -56,11 +71,34 @@ def main(argv=None):
     kv_fmt = args.kv_cache_format or ("bf16" if args.bf16 else "nvfp4")
     scfg = ServeConfig(batch_size=args.batch, max_len=args.max_len,
                        temperature=args.temperature,
-                       kv_cache_format=kv_fmt)
+                       kv_cache_format=kv_fmt,
+                       page_size=args.page_size, max_slots=args.max_slots)
     qcfg = fqt.bf16_config() if args.bf16 else None
-    eng = Engine(cfg, params, scfg, qcfg=qcfg)
-
     rng = np.random.default_rng(0)
+
+    if args.queue:
+        # continuous batching: staggered arrivals through the scheduler
+        eng = ContinuousEngine(cfg, params, scfg, qcfg=qcfg)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            args.prompt_len),
+                        max_new=args.max_new, arrival=i // 2)
+                for i in range(args.queue)]
+        t0 = time.perf_counter()
+        res = eng.run(reqs)
+        dt = time.perf_counter() - t0
+        ntok = sum(len(o) for o in res.values())
+        st = eng.scheduler.stats
+        print(f"{ntok} tokens / {st['completed']} requests in {dt:.2f}s "
+              f"({ntok / dt:.1f} tok/s incl. compile; slot util "
+              f"{eng.scheduler.slot_utilization:.2f}; compiles: "
+              f"prefill {eng.prefill_compiles}, decode "
+              f"{eng.decode_compiles})")
+        for rid in sorted(res)[:4]:
+            print(f"req {rid}: {res[rid][:16].tolist()} ...")
+        return
+
+    eng = Engine(cfg, params, scfg, qcfg=qcfg)
     prompts = [rng.integers(0, cfg.vocab_size, args.prompt_len)
                for _ in range(args.batch)]
     extras = {}

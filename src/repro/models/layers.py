@@ -407,55 +407,263 @@ jax.tree_util.register_dataclass(
     meta_fields=["fmt", "block"])
 
 
+def _kv_quant_any(x: jax.Array, fmt: str, block: int):
+    """``kv_quant_rows`` plus the bf16 passthrough (codes = values, scales
+    a (..., 1) placeholder) so paged caches treat all formats uniformly."""
+    if fmt == "bf16":
+        return (x.astype(jnp.bfloat16),
+                jnp.ones(x.shape[:-1] + (1,), jnp.bfloat16))
+    from repro.core.quantize import kv_quant_rows
+    return kv_quant_rows(x, fmt, block)
+
+
+def _kv_dequant_any(codes: jax.Array, scales: jax.Array, fmt: str,
+                    block: int, dtype=jnp.bfloat16) -> jax.Array:
+    if fmt == "bf16":
+        return codes.astype(dtype)
+    from repro.core.quantize import kv_dequant
+    return kv_dequant(codes, scales, fmt, block, dtype)
+
+
+# Physical page 0 is reserved as the TRASH page: freed slots' page-table
+# rows point at it, so the static-shape decode program can keep writing for
+# inactive slots without corrupting pages reallocated to other requests.
+TRASH_PAGE = 0
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Paged per-layer KV cache: pages allocated from a shared pool.
+
+    vLLM-style continuous batching needs per-slot sequence lengths and
+    block-granular storage reuse; this container provides both on top of
+    the existing packed row formats:
+
+      * ``k_codes``/``v_codes``: the PHYSICAL page pool, (P, page, KVH, Dc)
+        where Dc follows ``fmt`` (nvfp4: D/2 uint8 nibble pairs, fp8: D
+        float8 codes, bf16: D bf16 — the escape hatch);
+      * ``k_scales``/``v_scales``: per-row block scales, (P, page, KVH, nb);
+      * ``page_table``: (B, n_pages_slot) int32 physical page per logical
+        page of each slot.  Rows of freed slots point at the reserved
+        ``TRASH_PAGE`` so inactive slots' decode writes land harmlessly;
+      * ``lengths``: (B,) int32 tokens written per slot — the per-slot
+        ``kv_len``/``q_offset`` of continuous batching.
+
+    The logical per-slot buffer is ``n_pages_slot * page_size`` tokens.
+    SWA reuses the rolling-write rule of ``KVCache`` on the LOGICAL index
+    (``pos % buf``), which then maps through the page table — the rolling
+    buffer migrates onto pages instead of being special-cased again.
+    """
+
+    k_codes: jax.Array    # (P, page, KVH, Dc) physical pool
+    k_scales: jax.Array   # (P, page, KVH, nb)
+    v_codes: jax.Array
+    v_scales: jax.Array
+    page_table: jax.Array  # (B, n_pages_slot) int32
+    lengths: jax.Array     # (B,) int32 per-slot tokens written
+    fmt: str = "nvfp4"
+    block: int = 16
+    page_size: int = 16
+
+    @property
+    def n_slots(self) -> int:
+        return self.page_table.shape[0]
+
+    @property
+    def buf(self) -> int:
+        """Logical per-slot capacity in tokens."""
+        return self.page_table.shape[1] * self.page_size
+
+    @staticmethod
+    def init(slots: int, buf: int, n_kv: int, hd: int, fmt: str = "nvfp4",
+             block: int = 16, page_size: int = 16,
+             total_pages: Optional[int] = None) -> "PagedKVCache":
+        if buf % page_size:
+            raise ValueError(f"slot buffer {buf} not a multiple of "
+                             f"page_size {page_size}")
+        if fmt in ("nvfp4", "fp8") and (hd % block or hd % 2):
+            raise ValueError(
+                f"packed KV cache needs head_dim divisible by block={block} "
+                f"(and even), got head_dim={hd}")
+        n_pages_slot = buf // page_size
+        if total_pages is None:
+            total_pages = 1 + slots * n_pages_slot    # +1: the trash page
+        if fmt == "nvfp4":
+            codes = jnp.zeros((total_pages, page_size, n_kv, hd // 2),
+                              jnp.uint8)
+            scales = jnp.ones((total_pages, page_size, n_kv, hd // block),
+                              jnp.float8_e4m3fn)
+        elif fmt == "fp8":
+            codes = jnp.zeros((total_pages, page_size, n_kv, hd),
+                              jnp.float8_e4m3fn)
+            scales = jnp.ones((total_pages, page_size, n_kv, hd // block),
+                              jnp.bfloat16)
+        elif fmt == "bf16":
+            codes = jnp.zeros((total_pages, page_size, n_kv, hd),
+                              jnp.bfloat16)
+            scales = jnp.ones((total_pages, page_size, n_kv, 1),
+                              jnp.bfloat16)
+        else:
+            raise ValueError(f"unknown paged KV format {fmt!r}")
+        return PagedKVCache(
+            codes, scales, jnp.copy(codes), jnp.copy(scales),
+            jnp.full((slots, n_pages_slot), TRASH_PAGE, jnp.int32),
+            jnp.zeros((slots,), jnp.int32), fmt, block, page_size)
+
+    # ---- writes ---------------------------------------------------------
+
+    def write_prompt(self, slot, k: jax.Array, v: jax.Array,
+                     plen) -> "PagedKVCache":
+        """Prefill-into-slot: write a fresh (1, Sp, KVH, D) sequence into
+        ``slot``'s pages at logical positions [0, Sp) and reset the slot's
+        length to ``plen`` (the true prompt length; rows in [plen, Sp) are
+        right-pad garbage masked out by ``lengths`` at read time).
+        ``Sp <= buf`` so logical indices never collide (static check)."""
+        Sp = k.shape[1]
+        if Sp > self.buf:
+            raise ValueError(f"prefill length {Sp} exceeds slot capacity "
+                             f"{self.buf}")
+        t = jnp.arange(Sp, dtype=jnp.int32)
+        phys = self.page_table[slot, t // self.page_size]       # (Sp,)
+        off = t % self.page_size
+        kcod, ksc = _kv_quant_any(k[0], self.fmt, self.block)
+        vcod, vsc = _kv_quant_any(v[0], self.fmt, self.block)
+        return PagedKVCache(
+            self.k_codes.at[phys, off].set(kcod),
+            self.k_scales.at[phys, off].set(ksc),
+            self.v_codes.at[phys, off].set(vcod),
+            self.v_scales.at[phys, off].set(vsc),
+            self.page_table,
+            self.lengths.at[slot].set(jnp.asarray(plen, jnp.int32)),
+            self.fmt, self.block, self.page_size)
+
+    def write_token(self, k: jax.Array, v: jax.Array) -> "PagedKVCache":
+        """Batched decode write: one (B, 1, KVH, D) token per slot at each
+        slot's own length.  Inactive slots (freed mid-tick) write into the
+        trash page their table rows point at — different live slots hold
+        disjoint pages, so the scatter is collision-free where it matters."""
+        posl = self.lengths % self.buf           # rolling == linear < buf
+        page = posl // self.page_size
+        off = posl % self.page_size
+        phys = jnp.take_along_axis(self.page_table, page[:, None], 1)[:, 0]
+        kcod, ksc = _kv_quant_any(k[:, 0], self.fmt, self.block)
+        vcod, vsc = _kv_quant_any(v[:, 0], self.fmt, self.block)
+        return PagedKVCache(
+            self.k_codes.at[phys, off].set(kcod),
+            self.k_scales.at[phys, off].set(ksc),
+            self.v_codes.at[phys, off].set(vcod),
+            self.v_scales.at[phys, off].set(vsc),
+            self.page_table, self.lengths + 1,
+            self.fmt, self.block, self.page_size)
+
+    # ---- reads ----------------------------------------------------------
+
+    def gather_slots(self):
+        """Gather the logical (B, buf, KVH, ·) packed views through the
+        page table (the jnp mirror of the Pallas kernel's per-page DMA)."""
+        pt = self.page_table
+
+        def g(pool):
+            a = pool[pt]                  # (B, n_pages, page, KVH, ·)
+            return a.reshape((pt.shape[0], -1) + pool.shape[2:])
+
+        return (g(self.k_codes), g(self.k_scales),
+                g(self.v_codes), g(self.v_scales))
+
+    def dequant(self, dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+        """Full logical (B, buf, KVH, D) reconstruction — test oracle."""
+        kc, ks, vc, vs = self.gather_slots()
+        return (_kv_dequant_any(kc, ks, self.fmt, self.block, dtype),
+                _kv_dequant_any(vc, vs, self.fmt, self.block, dtype))
+
+    def nbytes(self) -> int:
+        """Stored pool bytes (codes + scales, k and v)."""
+        return int(sum(a.size * a.dtype.itemsize for a in
+                       (self.k_codes, self.k_scales,
+                        self.v_codes, self.v_scales)))
+
+
+jax.tree_util.register_dataclass(
+    PagedKVCache,
+    data_fields=["k_codes", "k_scales", "v_codes", "v_scales",
+                 "page_table", "lengths"],
+    meta_fields=["fmt", "block", "page_size"])
+
+
+def swa_kpos(lengths: jax.Array, buf: int) -> jax.Array:
+    """Absolute position held by each logical slot of a rolling buffer:
+    slot j holds the most recent token with pos % buf == j.  ``lengths``:
+    (B,) per-slot lengths -> (B, buf); unwritten slots come out negative
+    (mask with ``kpos >= 0`` or the kv_len rule)."""
+    last = lengths[:, None] - 1
+    slot = jnp.arange(buf, dtype=jnp.int32)[None, :]
+    return last - ((last % buf - slot) % buf)
+
+
 def make_kv_cache(batch: int, buf: int, n_kv: int, hd: int,
-                  dtype=jnp.bfloat16, kv_format: str = "bf16"):
-    """Cache-shape API: bf16 ``KVCache`` or block-quantized ``PackedKVCache``."""
+                  dtype=jnp.bfloat16, kv_format: str = "bf16",
+                  page_size: Optional[int] = None,
+                  total_pages: Optional[int] = None):
+    """Cache-shape API: bf16 ``KVCache``, block-quantized ``PackedKVCache``,
+    or (``page_size`` set) a ``PagedKVCache`` over a shared page pool."""
+    if page_size:
+        return PagedKVCache.init(batch, buf, n_kv, hd, fmt=kv_format,
+                                 page_size=page_size,
+                                 total_pages=total_pages)
     if kv_format == "bf16":
         return KVCache.init(batch, buf, n_kv, hd, dtype)
     return PackedKVCache.init(batch, buf, n_kv, hd, fmt=kv_format)
 
 
-def _attn_decode_packed(q, cache: PackedKVCache, *, qpos, kpos, causal,
-                        window, kv_len, chunk: int = 1024) -> jax.Array:
-    """Decode attention over a packed cache: flash-style scan over kv chunks
-    with running (max, denom, acc) stats, dequantizing each chunk's K/V
-    blocks inside the scan body — only one chunk of bf16 K/V ever exists at
-    a time (the jnp mirror of the Pallas kernel's in-VMEM dequant).
+def _attn_decode_fused(q, k_codes, k_scales, v_codes, v_scales, fmt: str,
+                       block: int, *, qpos, kpos, causal, window, kv_len,
+                       chunk: int = 1024) -> jax.Array:
+    """Fused decode attention core: flash-style scan over kv chunks with
+    running (max, denom, acc) stats, dequantizing each chunk's K/V blocks
+    inside the scan body — only one chunk of bf16 K/V ever exists at a
+    time (the jnp mirror of the Pallas kernel's in-VMEM dequant).
 
-    q: (B, Sq, H, D) with Sq small (decode: 1); kpos: (S_buf,) absolute
-    positions held by each slot; kv_len: valid slot count.
+    Positions may be SHARED or PER-SLOT (continuous batching):
+      * qpos: (Sq,) or (B, Sq) absolute query positions;
+      * kpos: (S_buf,) or (B, S_buf) absolute position held by each slot;
+      * kv_len: None, scalar, or (B,) valid-slot counts.
+    q: (B, Sq, H, D) with Sq small (decode: 1); codes/scales: the packed
+    (B, S_buf, KVH, ·) layouts (``fmt`` "nvfp4"/"fp8"/"bf16").
     """
-    from repro.core.quantize import kv_dequant
     B, Sq, H, D = q.shape
-    KVH = cache.k_codes.shape[2]
+    KVH = k_codes.shape[2]
     G = H // KVH
-    buf = cache.k_codes.shape[1]
+    buf = k_codes.shape[1]
     kc = chunk if buf % chunk == 0 else buf
     nk = buf // kc
     scale = D ** -0.5
     qf = q.reshape(B, Sq, KVH, G, D).astype(jnp.float32)
+    qpos = jnp.broadcast_to(jnp.atleast_2d(qpos), (B, Sq))
+    kpos = jnp.broadcast_to(jnp.atleast_2d(kpos), (B, buf))
     if kv_len is not None:
-        kpos = jnp.where(jnp.arange(buf) < kv_len, kpos, jnp.int32(2 ** 30))
+        kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+        kpos = jnp.where(jnp.arange(buf)[None, :] < kv_len[:, None], kpos,
+                         jnp.int32(2 ** 30))
 
     def chunked(a):
         return a.reshape((B, nk, kc) + a.shape[2:]).swapaxes(0, 1)
 
-    kin = (chunked(cache.k_codes), chunked(cache.k_scales),
-           chunked(cache.v_codes), chunked(cache.v_scales),
-           kpos.reshape(nk, kc))
+    kin = (chunked(k_codes), chunked(k_scales),
+           chunked(v_codes), chunked(v_scales),
+           kpos.reshape(B, nk, kc).swapaxes(0, 1))
 
     def kv_step(carry, xs):
         m, l, acc = carry                                  # (B,KVH,G,Sq[,D])
         kc_, ks_, vc_, vs_, kp = xs
-        ki = kv_dequant(kc_, ks_, cache.fmt, cache.block, jnp.float32)
-        vi = kv_dequant(vc_, vs_, cache.fmt, cache.block, jnp.float32)
+        ki = _kv_dequant_any(kc_, ks_, fmt, block, jnp.float32)
+        vi = _kv_dequant_any(vc_, vs_, fmt, block, jnp.float32)
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, ki) * scale
-        mask = jnp.ones((Sq, kc), bool)
+        mask = jnp.ones((B, Sq, kc), bool)
         if causal:
-            mask &= kp[None, :] <= qpos[:, None]
+            mask &= kp[:, None, :] <= qpos[:, :, None]
         if window is not None:
-            mask &= kp[None, :] > qpos[:, None] - window
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+            mask &= kp[:, None, :] > qpos[:, :, None] - window
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         corr = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -472,11 +680,33 @@ def _attn_decode_packed(q, cache: PackedKVCache, *, qpos, kpos, causal,
     return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)
 
 
+def _attn_decode_packed(q, cache: PackedKVCache, *, qpos, kpos, causal,
+                        window, kv_len, chunk: int = 1024) -> jax.Array:
+    """Decode attention over a (non-paged) packed cache — see
+    ``_attn_decode_fused`` for the scan; positions are shared scalars here."""
+    return _attn_decode_fused(q, cache.k_codes, cache.k_scales,
+                              cache.v_codes, cache.v_scales, cache.fmt,
+                              cache.block, qpos=qpos, kpos=kpos,
+                              causal=causal, window=window, kv_len=kv_len,
+                              chunk=chunk)
+
+
+def _attn_decode_paged(q, cache: PagedKVCache, *, qpos, kpos, causal,
+                       window, kv_len, chunk: int = 1024) -> jax.Array:
+    """Decode attention over a PAGED cache with per-slot lengths: gather
+    the packed K/V tiles through the page table (still at packed width —
+    the bf16 cache never exists), then run the fused per-slot scan."""
+    kc, ks, vc, vs = cache.gather_slots()
+    return _attn_decode_fused(q, kc, ks, vc, vs, cache.fmt, cache.block,
+                              qpos=qpos, kpos=kpos, causal=causal,
+                              window=window, kv_len=kv_len, chunk=chunk)
+
+
 def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
                rope_theta: float, causal: bool = True,
                window: Optional[int] = None, chunk: int = 1024,
                positions: Optional[jax.Array] = None,
-               cache=None,
+               cache=None, slot=None, plen=None,
                xkv: Optional[jax.Array] = None,
                norm_eps: float = 1e-5, use_rope: bool = True):
     """Self- (or cross-, via xkv) attention with optional KV cache update.
@@ -487,6 +717,12 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
     SWA the cache buffer is min(window, S_buf) and written modulo buffer
     size (rolling).  Packed caches quantize writes (RtN along the head dim)
     and the decode read dequantizes blocks on the fly.
+
+    With a ``PagedKVCache`` each batch row is an independent SLOT with its
+    own length: decode (S=1, ``slot=None``) writes every slot's token at
+    that slot's position and attends with per-slot kv_len/q_offset;
+    prefill-into-slot (``slot`` given, B=1) writes a fresh right-padded
+    prompt into one slot's pages and resets its length to ``plen``.
     """
     B, S, d = x.shape
     src = x if xkv is None else xkv
@@ -497,9 +733,17 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
     k = k.reshape(B, src.shape[1], n_kv, hd)
     v = v.reshape(B, src.shape[1], n_kv, hd)
 
+    paged = isinstance(cache, PagedKVCache)
     if positions is None:
-        base = cache.length if cache is not None else 0
-        positions = base + jnp.arange(S, dtype=jnp.int32)
+        if paged:
+            # per-slot positions (continuous batching); a fresh prefill
+            # slot starts at 0
+            positions = (jnp.arange(S, dtype=jnp.int32) if slot is not None
+                         else cache.lengths[:, None]
+                         + jnp.arange(S, dtype=jnp.int32)[None, :])
+        else:
+            base = cache.length if cache is not None else 0
+            positions = base + jnp.arange(S, dtype=jnp.int32)
 
     if "q_norm" in p:
         q = rmsnorm(q, p["q_norm"], norm_eps)
@@ -507,11 +751,40 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
 
     if use_rope and xkv is None:
         cos_q, sin_q = rope_tables(positions, hd, rope_theta)
-        q = apply_rope(q, cos_q[None], sin_q[None])
-        k = apply_rope(k, cos_q[None], sin_q[None])
+        if positions.ndim == 1:                # shared -> add batch dim;
+            cos_q, sin_q = cos_q[None], sin_q[None]   # per-slot is (B, S, ·)
+        q = apply_rope(q, cos_q, sin_q)
+        k = apply_rope(k, cos_q, sin_q)
 
     new_cache = None
-    if cache is not None and xkv is None:
+    if paged and xkv is None:
+        buf = cache.buf
+        if slot is not None:
+            # prefill-into-slot (B == 1): write the fresh sequence into the
+            # slot's pages; attend within the fresh tokens directly (right-
+            # pad rows are garbage queries whose outputs the caller drops).
+            new_cache = cache.write_prompt(
+                slot, k, v, S if plen is None else plen)
+            o = attention_core(q, k, v, qpos=positions, kpos=positions,
+                               causal=causal, window=window, chunk=chunk)
+        else:
+            # batched decode (S == 1): per-slot write + per-slot read
+            if S != 1:
+                raise ValueError("paged caches prefill one slot at a time "
+                                 "(pass slot=...); batched S>1 writes are "
+                                 "the lockstep caches' path")
+            new_cache = cache.write_token(k, v)
+            lengths = new_cache.lengths                   # post-write
+            if window is not None:
+                kpos = swa_kpos(lengths, buf)
+            else:
+                kpos = jnp.broadcast_to(
+                    jnp.arange(buf, dtype=jnp.int32)[None, :], (B, buf))
+            kv_len = jnp.minimum(lengths, buf)
+            o = _attn_decode_paged(q, new_cache, qpos=positions, kpos=kpos,
+                                   causal=causal, window=window,
+                                   kv_len=kv_len, chunk=chunk)
+    elif cache is not None and xkv is None:
         packed = isinstance(cache, PackedKVCache)
         buf = (cache.k_codes if packed else cache.k).shape[1]
         start = cache.length % buf if window is not None else cache.length

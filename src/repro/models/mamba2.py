@@ -274,9 +274,14 @@ def init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16, kv_format: str = "bf16"):
-    return [make_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype,
-                          kv_format)
+               dtype=jnp.bfloat16, kv_format: str = "bf16",
+               page_size=None, total_pages=None):
+    buf = max_len
+    if page_size:
+        buf = -(-buf // page_size) * page_size
+    return [make_kv_cache(batch, buf, cfg.n_kv_heads, cfg.hd, dtype,
+                          kv_format, page_size=page_size,
+                          total_pages=total_pages)
             for _ in range(_n_attn(cfg))]
 
 

@@ -72,7 +72,8 @@ def forward(params, cfg: ModelConfig, qcfg: QuantConfig, batch, *, seed=0,
 
 
 def make_decode_state(cfg: ModelConfig, batch: int, max_len: int,
-                      dtype=jnp.bfloat16, kv_cache_format: str = "bf16"):
+                      dtype=jnp.bfloat16, kv_cache_format: str = "bf16",
+                      page_size=None, total_pages=None):
     """Carry passed to decode_step; represents a cache filled to max_len
     capacity (dry-run shapes: the decode cell is 'one new token against a
     seq_len-deep cache').
@@ -81,20 +82,27 @@ def make_decode_state(cfg: ModelConfig, batch: int, max_len: int,
     caches are stored block-quantized along the head dim (PackedKVCache)
     and dequantized on the fly by the decode read.  The ssm family has no
     KV cache; its O(1) recurrent state always stays in high precision.
+
+    ``page_size``: when set, attention KV caches become ``PagedKVCache``s
+    over a shared page pool with PER-SLOT lengths — the storage behind
+    continuous batching (serve/scheduler.py).  ``total_pages`` sizes the
+    pool (default: one full reservation per slot plus the trash page).
     """
     if cfg.family in _TRANSFORMER_FAMILIES:
         return transformer.init_cache(cfg, batch, max_len, dtype,
-                                      kv_cache_format)
+                                      kv_cache_format, page_size,
+                                      total_pages)
     if cfg.family == "hybrid":
         return (mamba2.init_state(cfg, batch, dtype),
                 mamba2.init_cache(cfg, batch, max_len, dtype,
-                                  kv_cache_format))
+                                  kv_cache_format, page_size, total_pages))
     if cfg.family == "ssm":
         return xlstm.init_state(cfg, batch)
     if cfg.family == "encdec":
         enc_out = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), dtype)
         return (enc_out, whisper.init_cache(cfg, batch, max_len, dtype,
-                                            kv_cache_format))
+                                            kv_cache_format, page_size,
+                                            total_pages))
     raise ValueError(cfg.family)
 
 
@@ -130,6 +138,39 @@ def prefill(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, carry,
 
     carry, logits = jax.lax.scan(body, carry, tokens.T)
     return logits[-1], carry
+
+
+def prefill_slot(params, cfg: ModelConfig, qcfg: QuantConfig, tokens,
+                 carry, slot, plen, *, seed=0, extras=None):
+    """Prefill ONE slot of a paged decode carry from a right-padded (1, Sp)
+    prompt (continuous batching admission).  Returns (logits (1, V), carry).
+
+    Supported for the attention-prefillable families (dense/moe
+    transformers and the whisper decoder).  The recurrent families
+    (hybrid/ssm) absorb every input token into O(1) state, so a static-
+    shape right-padded prefill would pollute their state with pad tokens —
+    they stay on the lockstep engine until a masked-scan prefill lands.
+    """
+    extras = extras or {}
+    if cfg.family in ("dense", "moe"):
+        return transformer.prefill_slot(params, cfg, qcfg, tokens, carry,
+                                        slot, plen, seed=seed)
+    if cfg.family == "encdec":
+        enc_out, caches = carry
+        frames = extras.get("frames")
+        if frames is None:
+            frames = jnp.zeros((1, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        enc_slot = whisper.encode(params, cfg, qcfg, frames, seed=seed)
+        enc_out = jax.lax.dynamic_update_slice_in_dim(
+            enc_out, enc_slot.astype(enc_out.dtype),
+            jnp.asarray(slot, jnp.int32), axis=0)
+        logits, caches = whisper.prefill_slot(params, cfg, qcfg, tokens,
+                                              enc_slot, caches, slot, plen,
+                                              seed=seed)
+        return logits, (enc_out, caches)
+    raise NotImplementedError(
+        f"prefill_slot: family {cfg.family!r} not supported (recurrent "
+        f"state cannot be prefilled from a right-padded static shape)")
 
 
 def decode_step(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, carry,

@@ -55,7 +55,7 @@ def init(cfg: ModelConfig, key, dtype=jnp.bfloat16):
 
 
 def _layer_apply(cfg: ModelConfig, lp, x, seed, *, positions, cache,
-                 qcfg: QuantConfig):
+                 qcfg: QuantConfig, slot=None, plen=None):
     ctx = QCtx(qcfg, seed)
     x = constrain(x, "res")
     h, new_cache = attn_apply(
@@ -63,7 +63,7 @@ def _layer_apply(cfg: ModelConfig, lp, x, seed, *, positions, cache,
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
         rope_theta=cfg.rope_theta, window=cfg.sliding_window,
         chunk=cfg.attn_chunk, positions=positions, cache=cache,
-        norm_eps=cfg.norm_eps)
+        slot=slot, plen=plen, norm_eps=cfg.norm_eps)
     x = x + h
     hin = rmsnorm(x, lp["ln2"], cfg.norm_eps)
     if cfg.n_experts:
@@ -77,7 +77,8 @@ def _layer_apply(cfg: ModelConfig, lp, x, seed, *, positions, cache,
 
 
 def apply_layers(params, cfg: ModelConfig, qcfg: QuantConfig, x, seed, *,
-                 positions=None, caches=None, remat: bool = False):
+                 positions=None, caches=None, remat: bool = False,
+                 slot=None, plen=None):
     """Scan the stacked layers.  Returns (x, new_caches, aux_loss_sum)."""
     L = cfg.n_layers
     seeds = jnp.asarray(seed, jnp.uint32) + jnp.arange(
@@ -86,7 +87,7 @@ def apply_layers(params, cfg: ModelConfig, qcfg: QuantConfig, x, seed, *,
     def body(x, per_layer):
         lp, s, c = per_layer
         y, nc, aux = _layer_apply(cfg, lp, x, s, positions=positions,
-                                  cache=c, qcfg=qcfg)
+                                  cache=c, qcfg=qcfg, slot=slot, plen=plen)
         return y, (nc, aux)
 
     if remat:
@@ -132,15 +133,37 @@ def forward(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, *,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16, kv_format: str = "bf16"):
+               dtype=jnp.bfloat16, kv_format: str = "bf16",
+               page_size=None, total_pages=None):
     buf = max_len if cfg.sliding_window is None else min(
         max_len, cfg.sliding_window)
+    if page_size:                      # paged: round up to whole pages
+        buf = -(-buf // page_size) * page_size
 
     def one(_):
         return make_kv_cache(batch, buf, cfg.n_kv_heads, cfg.hd, dtype,
-                             kv_format)
+                             kv_format, page_size=page_size,
+                             total_pages=total_pages)
 
     return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+def prefill_slot(params, cfg: ModelConfig, qcfg: QuantConfig, tokens,
+                 caches, slot, plen, *, seed=0):
+    """Prefill ONE paged slot from a right-padded (1, Sp) prompt.
+
+    ``plen`` (dynamic) is the true prompt length; rows in [plen, Sp) are
+    pad whose cache writes are masked by the slot length at read time.
+    Returns (logits_at_last_prompt_token (1, V), caches)."""
+    x = params["embed"][tokens]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, new_caches, _ = apply_layers(params, cfg, qcfg, x, seed,
+                                    positions=positions, caches=caches,
+                                    remat=False, slot=slot, plen=plen)
+    x = jax.lax.dynamic_slice_in_dim(
+        x, jnp.asarray(plen, jnp.int32) - 1, 1, axis=1)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _logits(params, cfg, qcfg, x, seed)[:, 0], new_caches
 
 
 def prefill(params, cfg, qcfg, tokens, caches, *, seed=0,

@@ -16,9 +16,9 @@ import jax.numpy as jnp
 from repro.core.fqt import QuantConfig
 from repro.distributed.sharding import constrain
 from repro.models.config import ModelConfig
-from repro.models.layers import (QCtx, attn_apply, attn_params, dense_init,
-                                 embed_init, make_kv_cache, mlp_apply,
-                                 mlp_params, rmsnorm)
+from repro.models.layers import (PagedKVCache, QCtx, attn_apply, attn_params,
+                                 dense_init, embed_init, make_kv_cache,
+                                 mlp_apply, mlp_params, rmsnorm)
 
 _SEED_STRIDE = jnp.uint32(0x9E3779B9)
 
@@ -86,7 +86,7 @@ def encode(params, cfg: ModelConfig, qcfg: QuantConfig, frames, *, seed=0,
 
 
 def _decoder(params, cfg, qcfg, x, enc_out, seed, *, positions, caches,
-             remat=False):
+             remat=False, slot=None, plen=None):
     seeds = (jnp.asarray(seed, jnp.uint32) + jnp.uint32(0x777)
              + jnp.arange(cfg.n_layers, dtype=jnp.uint32) * _SEED_STRIDE)
 
@@ -98,7 +98,7 @@ def _decoder(params, cfg, qcfg, x, enc_out, seed, *, positions, caches,
                            ctx, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
                            hd=cfg.hd, rope_theta=cfg.rope_theta,
                            chunk=cfg.attn_chunk, positions=positions,
-                           cache=c, use_rope=False)
+                           cache=c, slot=slot, plen=plen, use_rope=False)
         x = x + h
         hx, _ = attn_apply(lp["xattn"], rmsnorm(x, lp["lnx"], cfg.norm_eps),
                            ctx, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
@@ -143,11 +143,33 @@ def forward(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, *,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16, kv_format: str = "bf16"):
+               dtype=jnp.bfloat16, kv_format: str = "bf16",
+               page_size=None, total_pages=None):
+    buf = max_len
+    if page_size:
+        buf = -(-buf // page_size) * page_size
+
     def one(_):
-        return make_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype,
-                             kv_format)
+        return make_kv_cache(batch, buf, cfg.n_kv_heads, cfg.hd, dtype,
+                             kv_format, page_size=page_size,
+                             total_pages=total_pages)
     return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+def prefill_slot(params, cfg, qcfg, tokens, enc_slot, caches, slot, plen,
+                 *, seed=0):
+    """Prefill ONE paged decoder slot from a right-padded (1, Sp) prompt
+    against that request's encoder output (1, enc_seq, d).  Returns
+    (logits_at_last_prompt_token (1, V), caches)."""
+    S = tokens.shape[1]
+    x = params["embed"][tokens] + params["pos_dec"][None, :S]
+    x, new_caches = _decoder(params, cfg, qcfg, x, enc_slot, seed,
+                             positions=jnp.arange(S, dtype=jnp.int32),
+                             caches=caches, slot=slot, plen=plen)
+    x = jax.lax.dynamic_slice_in_dim(
+        x, jnp.asarray(plen, jnp.int32) - 1, 1, axis=1)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _logits(params, cfg, qcfg, x, seed)[:, 0], new_caches
 
 
 def prefill(params, cfg, qcfg, tokens, enc_out, caches, *, seed=0):
@@ -165,8 +187,12 @@ def prefill(params, cfg, qcfg, tokens, enc_out, caches, *, seed=0):
 def decode_step(params, cfg, qcfg, tokens, carry, *, seed=0):
     """carry = (enc_out, caches); tokens: (B,1)."""
     enc_out, caches = carry
-    pos0 = caches.length[0]            # stacked per-layer lengths; all equal
-    x = params["embed"][tokens] + params["pos_dec"][pos0][None, None]
+    if isinstance(caches, PagedKVCache):
+        pos0 = caches.lengths[0]       # (B,) per-slot positions (layer 0)
+        x = params["embed"][tokens] + params["pos_dec"][pos0][:, None]
+    else:
+        pos0 = caches.length[0]        # stacked per-layer lengths; all equal
+        x = params["embed"][tokens] + params["pos_dec"][pos0][None, None]
     x, new_caches = _decoder(params, cfg, qcfg, x, enc_out, seed,
                              positions=None, caches=caches)
     x = rmsnorm(x, params["ln_f"], cfg.norm_eps)

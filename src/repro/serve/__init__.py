@@ -1,3 +1,5 @@
 from repro.serve import packing
-from repro.serve.engine import Engine, ServeConfig, serve_step_fn
+from repro.serve.engine import (ContinuousEngine, Engine, ServeConfig,
+                                serve_step_fn)
 from repro.serve.packing import pack_model_params, weight_store_bytes
+from repro.serve.scheduler import PagePool, Request, Scheduler

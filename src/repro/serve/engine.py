@@ -1,34 +1,43 @@
-"""Batched serving engine: FP4 forward, prefill + decode with KV caches.
+"""Serving engines: FP4 forward, prefill + decode with KV caches.
 
 The deployed artifact of the paper's pipeline is an *FP4-forward* model (the
 QAF phase keeps the forward path in FP4 precisely so the served model is
-FP4-inference-compatible).  The engine therefore runs every weight GEMM
-through the same NVFP4 RtN forward quantization used in training — serving
-is numerically identical to the training forward pass.
+FP4-inference-compatible).  Both engines run every weight GEMM through the
+same NVFP4 RtN forward quantization used in training — serving is
+numerically identical to the training forward pass.
 
-Design (vLLM-style, reduced to the paper's needs):
-  * ``prefill``: one full-sequence pass that fills the caches (GQA KV with
-    optional SWA rolling buffers, SSM conv/state for hybrid/ssm families).
-  * ``decode_step``: one token for every active sequence (B, 1).
-  * static-shape batching: requests are padded into fixed (B, S) slots so
-    the two compiled programs cover the whole serving life cycle (TPU-
-    friendly: no recompilation; slots free as sequences hit EOS/max_len).
-  * sampling: greedy or temperature/top-k, PRNG-keyed per request.
+Two engines share the packed-weight/packed-cache machinery:
+
+  * ``Engine`` — LOCKSTEP batches: all requests prefill together and the
+    batch decodes until every sequence finishes.  Simple, and the numeric
+    reference for the continuous engine.
+  * ``ContinuousEngine`` — vLLM-style CONTINUOUS batching over a paged
+    NVFP4 KV cache.  Request lifecycle (admission queue, per-slot lengths,
+    slot free/reuse on EOS/max_len, page reservations) lives in
+    ``serve/scheduler.py`` on the host; the device side is EXACTLY TWO
+    jitted programs with static shapes —
+
+        prefill-into-slot : right-padded (1, prefill_len) prompt into one
+                            slot's pages (dynamic slot/plen operands)
+        batched decode    : one token for every slot, per-slot
+                            kv_len/q_offset VECTOR operands
+
+    so admitting a queued request into a freed slot never recompiles.
+    Host sync happens once per scheduler TICK (``decode_chunk`` steps),
+    not per token.
+
   * quantize-once packed weights: GEMM weights are packed to NVFP4 storage
     (uint8 nibble codes + float8 block scales, ~0.56 bytes/param) at
-    engine build, so the bandwidth-bound decode path streams 4-bit weights
-    from HBM instead of re-fake-quantizing bf16 every token.  Bit-identical
-    tokens (serve/packing.py); disable with ``pack_weights=False``.
-  * block-quantized KV cache: prefill and decode cache writes are stored
-    packed (``ServeConfig.kv_cache_format``: "nvfp4" default, "fp8", or
-    the "bf16" escape hatch) and decode attention dequantizes K/V blocks
-    on the fly — long-context decode attention streams 0.5625 bytes/elem
-    of cache instead of 2 (models/layers.PackedKVCache).
+    engine build — bit-identical tokens (serve/packing.py).
+  * block-quantized KV cache (``ServeConfig.kv_cache_format``): "nvfp4"
+    (default, 0.5625 bytes/elem), "fp8", or the "bf16" escape hatch; the
+    continuous engine stores the same formats per PAGE
+    (models/layers.PagedKVCache).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +46,9 @@ import numpy as np
 from repro.core import fqt
 from repro.models import registry
 from repro.models.config import ModelConfig
+from repro.models.layers import TRASH_PAGE, PagedKVCache
 from repro.serve import packing
+from repro.serve.scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +66,15 @@ class ServeConfig:
     # with RtN (the paper's inference forward rounding); decode attention
     # dequantizes K/V blocks on the fly, never materializing a bf16 cache.
     kv_cache_format: str = "nvfp4"
+    # ---- continuous batching (ContinuousEngine) -------------------------
+    page_size: int = 16           # tokens per KV page
+    max_slots: Optional[int] = None    # decode slots (default: batch_size)
+    total_pages: Optional[int] = None  # page-pool size (None: one full
+                                       # reservation per slot + trash page)
+    prefill_len: Optional[int] = None  # static prefill pad (None: derived
+                                       # from the submitted trace)
+    decode_chunk: int = 8         # decode steps per scheduler tick — the
+                                  # host-sync cadence for BOTH engines
 
 
 def _sample(logits: jax.Array, key, scfg: ServeConfig) -> jax.Array:
@@ -68,8 +88,17 @@ def _sample(logits: jax.Array, key, scfg: ServeConfig) -> jax.Array:
     return jax.random.categorical(key, logits).astype(jnp.int32)
 
 
+def _greedy_margin(logits: jax.Array) -> jax.Array:
+    """Top1-top2 logit gap per row — how decisive the greedy pick is.
+    Near-tied rows are where bounded numeric perturbations flip greedy
+    tokens (random-init smoke models have near-flat logits); the engine
+    tests gate token-identity assertions on this margin."""
+    top2 = jax.lax.top_k(logits.astype(jnp.float32), 2)[0]
+    return top2[..., 0] - top2[..., 1]
+
+
 class Engine:
-    """Single-model serving engine over the uniform registry API."""
+    """Single-model LOCKSTEP serving engine over the uniform registry API."""
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
                  qcfg: Optional[fqt.QuantConfig] = None,
@@ -85,7 +114,7 @@ class Engine:
         self.params = params
 
         self._prefill = jax.jit(self._prefill_impl)
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(2,))
 
     # ---- compiled kernels --------------------------------------------------
 
@@ -93,12 +122,20 @@ class Engine:
         return registry.prefill(self.params, self.cfg, self.qcfg, tokens,
                                 carry, extras=extras)
 
-    def _decode_impl(self, tokens, carry, key):
+    def _decode_impl(self, tokens, done, carry, key):
+        """One lockstep decode step with ON-DEVICE done/EOS bookkeeping:
+        emit = the masked output token for this step, done accumulates the
+        EOS mask, and the PRNG chain advances on device — the host only
+        syncs once per ``decode_chunk`` tick."""
+        eos = jnp.int32(self.scfg.eos_id)
+        emit = jnp.where(done, eos, tokens)
+        done = done | (tokens == eos)
+        key, sub = jax.random.split(key)
         logits, carry = registry.decode_step(self.params, self.cfg,
-                                             self.qcfg, tokens[:, None],
+                                             self.qcfg, emit[:, None],
                                              carry)
-        nxt = _sample(logits[:, -1], key, self.scfg)
-        return nxt, carry
+        nxt = _sample(logits[:, -1], sub, self.scfg)
+        return emit, done, nxt, carry, key
 
     # ---- public API ----------------------------------------------------------
 
@@ -122,19 +159,254 @@ class Engine:
         extras = extras or {}
         last_logits, carry = self._prefill(toks, carry, extras)
 
-        key = jax.random.PRNGKey(scfg.seed)
-        out = np.zeros((scfg.batch_size, max_new), np.int32)
-        done = np.zeros((scfg.batch_size,), bool)
-        nxt = _sample(last_logits, key, scfg)
+        # PRNG hygiene: split the root key FIRST — the first sampled token
+        # uses a child, never the parent of the per-step chain.
+        key, sub = jax.random.split(jax.random.PRNGKey(scfg.seed))
+        nxt = _sample(last_logits, sub, scfg)
+        done = jnp.zeros((scfg.batch_size,), bool)
+        emitted = []                      # device arrays; no per-step sync
+        sync = max(1, scfg.decode_chunk)
         for t in range(max_new):
-            out[:, t] = np.where(done, scfg.eos_id, np.asarray(nxt))
-            done |= np.asarray(nxt) == scfg.eos_id
-            if done.all():
-                out = out[:, : t + 1]
+            emit, done, nxt, carry, key = self._decode(nxt, done, carry, key)
+            emitted.append(emit)
+            # transfer the done mask once per tick, not per token
+            if (t + 1) % sync == 0 and bool(np.asarray(done).all()):
                 break
-            key, sub = jax.random.split(key)
-            nxt, carry = self._decode(jnp.asarray(out[:, t]), carry, sub)
+        if not emitted:                   # max_new == 0
+            return [np.zeros((0,), np.int32) for _ in range(B)]
+        out = np.asarray(jnp.stack(emitted, axis=1))     # one transfer
+        # truncate at the first step where every row had emitted its EOS
+        seen = np.cumsum(out == scfg.eos_id, axis=1) > 0
+        alldone = seen.all(axis=0)
+        if alldone.any():
+            out = out[:, : int(np.argmax(alldone)) + 1]
         return [out[i] for i in range(B)]
+
+
+class ContinuousEngine:
+    """Continuous batching over a paged, block-quantized KV cache.
+
+    Requests arrive on a (deterministic, tick-indexed) trace, wait in the
+    scheduler's FIFO queue, and are admitted whenever a slot AND enough
+    free pages exist; slots free on EOS/max_new and are reused without
+    recompilation.  Families: dense/moe transformers and the whisper
+    decoder (``encdec``).  The recurrent families absorb pad tokens into
+    O(1) state, so a static right-padded prefill can't serve them — they
+    stay on the lockstep ``Engine`` (registry.prefill_slot raises).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 qcfg: Optional[fqt.QuantConfig] = None,
+                 pack_weights: bool = True):
+        if cfg.family not in ("dense", "moe", "encdec"):
+            raise NotImplementedError(
+                f"continuous batching serves dense/moe/encdec families; "
+                f"{cfg.family!r} stays on the lockstep Engine")
+        self.cfg, self.scfg = cfg, scfg
+        self.qcfg = qcfg if qcfg is not None else fqt.qaf_config()
+        if pack_weights and self.qcfg.fwd_w is not None:
+            params = packing.pack_model_params(cfg, params, self.qcfg.fwd_w)
+        self.params = params
+
+        self.n_slots = scfg.max_slots or scfg.batch_size
+        psz = scfg.page_size
+        buf = (scfg.max_len if cfg.sliding_window is None
+               else min(scfg.max_len, cfg.sliding_window))
+        self.slot_buf = -(-buf // psz) * psz   # logical tokens per slot
+        self.n_pages_slot = self.slot_buf // psz
+        self._root = jax.random.PRNGKey(scfg.seed)
+
+        self._prefill = jax.jit(self._prefill_impl, donate_argnums=(4,))
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+
+    # ---- the two compiled programs ----------------------------------------
+
+    def _request_key(self, rid, step):
+        """Per-request sampling stream, keyed by REQUEST ID (not slot), so
+        slot reuse never replays another request's stream."""
+        return jax.random.fold_in(jax.random.fold_in(self._root, rid), step)
+
+    def _prefill_impl(self, tokens, plen, slot, rid, carry, extras):
+        """Prefill one slot from a right-padded (1, prefill_len) prompt and
+        sample that request's first token.  slot/plen/rid are DYNAMIC
+        operands — one compiled program serves every admission."""
+        logits, carry = registry.prefill_slot(
+            self.params, self.cfg, self.qcfg, tokens, carry, slot, plen,
+            extras=extras)
+        tok = _sample(logits, self._request_key(rid, 0), self.scfg)[0]
+        return tok, _greedy_margin(logits)[0], carry
+
+    def _decode_impl(self, tokens, carry, rids, steps):
+        """One token for every slot; per-slot kv_len/q_offset ride inside
+        the paged caches (``PagedKVCache.lengths``) as vector state."""
+        logits, carry = registry.decode_step(self.params, self.cfg,
+                                             self.qcfg, tokens[:, None],
+                                             carry)
+        lg = logits[:, -1]
+        if self.scfg.temperature <= 0.0:
+            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        else:
+            keys = jax.vmap(self._request_key)(rids, steps)
+            nxt = jax.vmap(
+                lambda l, k: _sample(l[None], k, self.scfg)[0])(lg, keys)
+        return nxt, _greedy_margin(lg), steps + 1, carry
+
+    # ---- jit-cache introspection (no-recompile guarantees) -----------------
+
+    @property
+    def prefill_compiles(self) -> int:
+        return self._prefill._cache_size()
+
+    @property
+    def decode_compiles(self) -> int:
+        return self._decode._cache_size()
+
+    # ---- host-side plumbing ------------------------------------------------
+
+    def _set_page_row(self, carry, slot: int, row: np.ndarray):
+        """Point one slot's page-table row (all layers) at new pages —
+        the only carry mutation done outside the two compiled programs
+        (a few hundred int32s per admission)."""
+        row = jnp.asarray(row, jnp.int32)
+
+        def upd(c):
+            if isinstance(c, PagedKVCache):
+                return dataclasses.replace(
+                    c, page_table=c.page_table.at[..., slot, :].set(row))
+            return c
+
+        return jax.tree_util.tree_map(
+            upd, carry, is_leaf=lambda x: isinstance(x, PagedKVCache))
+
+    def _derive_prefill_len(self, requests: List[Request]) -> int:
+        if self.scfg.prefill_len is not None:
+            pad = self.scfg.prefill_len
+        else:
+            pad = max((len(r.prompt) for r in requests), default=1)
+        pad = min(-(-pad // self.scfg.page_size) * self.scfg.page_size,
+                  self.slot_buf)
+        long = [r.rid for r in requests if len(r.prompt) > pad]
+        if long:
+            raise ValueError(
+                f"requests {long}: prompt exceeds the static prefill "
+                f"length {pad} (slot capacity {self.slot_buf})")
+        return pad
+
+    # ---- serving loop ------------------------------------------------------
+
+    def run(self, requests: List[Request],
+            extras: Optional[Dict[int, dict]] = None,
+            forced: Optional[Dict[int, np.ndarray]] = None
+            ) -> Dict[int, np.ndarray]:
+        """Serve a request trace to completion; returns {rid: tokens}.
+
+        ``extras``: per-rid extras (encdec frames).  ``forced``: per-rid
+        teacher-forcing streams — the engine FEEDS the forced tokens but
+        records its own picks (and greedy margins, ``self.margins``); used
+        by the token-identity tests to compare across near-tied logits.
+        """
+        scfg = self.scfg
+        forced = forced or {}
+        extras = extras or {}
+        sched = Scheduler(self.n_slots, scfg.max_len, scfg.page_size,
+                          total_pages=scfg.total_pages,
+                          slot_pages=self.n_pages_slot)
+        self.scheduler = sched
+        for r in requests:
+            sched.submit(r)
+        prefill_pad = self._derive_prefill_len(requests)
+
+        carry = registry.make_decode_state(
+            self.cfg, self.n_slots, scfg.max_len,
+            kv_cache_format=scfg.kv_cache_format,
+            page_size=scfg.page_size, total_pages=sched.total_pages)
+        tokens = jnp.zeros((self.n_slots,), jnp.int32)
+        rids = jnp.zeros((self.n_slots,), jnp.int32)
+        steps = jnp.ones((self.n_slots,), jnp.int32)
+        self.margins: Dict[int, list] = {}
+        trash_row = np.full((self.n_pages_slot,), TRASH_PAGE, np.int32)
+        slot_rid = [None] * self.n_slots
+        slot_fed = {}                       # slot -> host index into forced
+        pending = {}                        # slot -> (tok, margin) DEVICE
+                                            # scalars from prefill, synced
+                                            # with the tick's one transfer
+
+        tick = 0
+        while sched.has_work():
+            # -- admissions (host): pages + slot, then ONE prefill program
+            for slot, req, row in sched.admit(tick):
+                carry = self._set_page_row(carry, slot, row)
+                padded = np.zeros((1, prefill_pad), np.int32)
+                padded[0, :len(req.prompt)] = req.prompt
+                tok, margin, carry = self._prefill(
+                    jnp.asarray(padded), jnp.asarray(len(req.prompt)),
+                    jnp.asarray(slot), jnp.asarray(req.rid), carry,
+                    extras.get(req.rid, {}))
+                slot_rid[slot] = req.rid
+                rids = rids.at[slot].set(req.rid)
+                steps = steps.at[slot].set(1)
+                pending[slot] = (tok, margin)
+                if req.rid in forced:
+                    slot_fed[slot] = 0
+                    tokens = tokens.at[slot].set(int(forced[req.rid][0]))
+                else:
+                    tokens = tokens.at[slot].set(tok)
+
+            # -- decode tick: no host transfer inside the loop
+            active = sched.active_slots()
+            T = sched.tick_steps(scfg.decode_chunk,
+                                 {s: 1 for s in pending})
+            picks, margs = [], []
+            for _ in range(T):
+                nxt, margin, steps, carry = self._decode(tokens, carry,
+                                                         rids, steps)
+                picks.append(nxt)
+                margs.append(margin)
+                tokens = nxt
+                for slot, idx in slot_fed.items():      # teacher forcing
+                    stream = forced[slot_rid[slot]]
+                    nxt_idx = min(idx + 1, len(stream) - 1)
+                    tokens = tokens.at[slot].set(int(stream[nxt_idx]))
+                    slot_fed[slot] = nxt_idx
+
+            # -- ONE host sync per tick: emitted picks + margins + firsts
+            em = (np.asarray(jnp.stack(picks, 0)) if picks
+                  else np.zeros((0, self.n_slots), np.int32))
+            mg = (np.asarray(jnp.stack(margs, 0)) if margs
+                  else np.zeros((0, self.n_slots), np.float32))
+            first_slots = sorted(pending)
+            firsts = {} if not first_slots else dict(zip(first_slots, zip(
+                np.asarray(jnp.stack([pending[s][0] for s in first_slots])),
+                np.asarray(jnp.stack([pending[s][1] for s in first_slots])))))
+            pending.clear()
+            for slot in active:
+                rid = slot_rid[slot]
+                toks, margins = [], self.margins.setdefault(rid, [])
+                if slot in firsts:
+                    toks.append(int(firsts[slot][0]))
+                    margins.append(float(firsts[slot][1]))
+                toks += [int(t) for t in em[:, slot]]
+                margins += [float(m) for m in mg[:, slot]]
+                sched.commit(slot, toks, scfg.eos_id)
+                if sched.slots[slot] is None:           # freed: park pages
+                    carry = self._set_page_row(carry, slot, trash_row)
+                    slot_rid[slot] = None
+                    slot_fed.pop(slot, None)
+            sched.count_tick(T, n_active=len(active))
+            tick += 1
+
+        self.margins = {rid: np.asarray(ms, np.float32)
+                        for rid, ms in self.margins.items()}
+        return dict(sched.results)
+
+    def generate(self, prompts: List[np.ndarray],
+                 max_new: int = 32) -> List[np.ndarray]:
+        """Lockstep-``Engine``-style convenience: all prompts arrive at
+        tick 0; returns outputs in prompt order (stops after EOS)."""
+        reqs = [Request(rid=i, prompt=np.asarray(p, np.int32),
+                        max_new=max_new) for i, p in enumerate(prompts)]
+        res = self.run(reqs)
+        return [res[i] for i in range(len(prompts))]
 
 
 def serve_step_fn(cfg: ModelConfig, qcfg: fqt.QuantConfig):

@@ -1,0 +1,209 @@
+"""Request-level scheduler for continuous batching (host-side, pure Python).
+
+The serving stack splits into two layers:
+
+  * THIS module — everything request-shaped and dynamic: the admission
+    queue, the shared page pool, per-slot sequence state (request id,
+    prompt length, tokens generated, per-request sampling stream), slot
+    free/reuse on EOS/max_new.  Nothing here touches jax; decisions are
+    made once per scheduler TICK, not per token.
+  * ``serve/engine.ContinuousEngine`` — exactly two jitted programs with
+    static shapes (prefill-into-slot, batched decode over all slots) whose
+    dynamic state (page table, per-slot lengths, request ids) lives in
+    device operands, so admission into a freed slot never recompiles.
+
+Paging: a request needs ``ceil((plen + max_new) / page_size)`` pages for
+its whole lifetime, reserved at admission — so the jitted decode loop
+never allocates, and admission is simply "a slot is free AND the pool has
+enough pages".  Physical page 0 is the TRASH page (layers.TRASH_PAGE):
+freed slots' table rows point at it, which lets the static decode program
+keep writing for inactive slots without corrupting reallocated pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.models.layers import TRASH_PAGE
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``arrival`` is a scheduler tick index, so
+    traces are deterministic (no wall-clock anywhere)."""
+    rid: int
+    prompt: np.ndarray
+    max_new: int = 32
+    arrival: int = 0
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Device-slot bookkeeping for one admitted request."""
+    rid: int
+    plen: int
+    max_new: int
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.tokens)
+
+
+class PagePool:
+    """Free-list allocator over the physical page pool (page 0 = trash)."""
+
+    def __init__(self, total_pages: int):
+        if total_pages < 2:
+            raise ValueError("page pool needs >= 2 pages (1 is the trash "
+                             "page)")
+        self._free = list(range(total_pages - 1, 0, -1))   # LIFO; skip trash
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p == TRASH_PAGE:
+                raise ValueError("cannot free the trash page")
+        self._free.extend(pages)
+
+
+class Scheduler:
+    """Admission queue + slot/page lifecycle for the continuous engine.
+
+    The engine drives it tick by tick:
+      1. ``submit`` requests (any time; ``arrival`` gates admission);
+      2. ``admit(tick)`` -> [(slot, Request, page_row)] newly placed
+         requests (the engine prefills each into its slot);
+      3. decode for ``tick_steps()`` steps, then feed the emitted tokens
+         back via ``commit(slot, toks)``;
+      4. finished slots are released (pages back to the pool) and show up
+         as results.
+    """
+
+    def __init__(self, n_slots: int, max_len: int, page_size: int,
+                 total_pages: Optional[int] = None,
+                 slot_pages: Optional[int] = None):
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        # page-table row width: SWA caches roll within min(max_len, window)
+        # logical tokens, so the engine passes its (smaller) row width in
+        self.n_pages_slot = slot_pages or -(-max_len // page_size)
+        if total_pages is None:
+            total_pages = 1 + n_slots * self.n_pages_slot
+        if total_pages - 1 < self.n_pages_slot:
+            raise ValueError(
+                f"page pool ({total_pages}) cannot hold even one full "
+                f"slot reservation ({self.n_pages_slot} pages)")
+        self.pool = PagePool(total_pages)
+        self.total_pages = total_pages
+        self.queue: deque = deque()
+        self.slots: List[Optional[SlotState]] = [None] * n_slots
+        self._held: Dict[int, List[int]] = {}          # slot -> pages
+        self.results: Dict[int, np.ndarray] = {}
+        # counters for the throughput bench / tests
+        self.stats = {"admitted": 0, "completed": 0, "decode_steps": 0,
+                      "slot_steps": 0, "active_slot_steps": 0}
+
+    # ---- submission / admission -----------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new} exceeds max_len {self.max_len}")
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1")
+        self.queue.append(req)
+
+    def admit(self, tick: int) -> List[Tuple[int, Request, np.ndarray]]:
+        """Place queued requests (arrival <= tick) into free slots while
+        the pool can reserve their pages.  FIFO head-of-line: the queue is
+        not reordered around a request that doesn't fit yet."""
+        placed = []
+        for slot in range(self.n_slots):
+            if not self.queue or self.slots[slot] is not None:
+                continue
+            req = self.queue[0]
+            if req.arrival > tick:
+                break
+            # SWA slots roll: a request never touches more than the slot's
+            # own page row, however long it runs
+            need = min(-(-(len(req.prompt) + req.max_new) // self.page_size),
+                       self.n_pages_slot)
+            pages = self.pool.alloc(need)
+            if pages is None:
+                break
+            self.queue.popleft()
+            self.slots[slot] = SlotState(req.rid, len(req.prompt),
+                                         req.max_new)
+            self._held[slot] = pages
+            row = np.full((self.n_pages_slot,), TRASH_PAGE, np.int32)
+            row[:need] = pages
+            self.stats["admitted"] += 1
+            placed.append((slot, req, row))
+        return placed
+
+    # ---- decode bookkeeping ----------------------------------------------
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def tick_steps(self, chunk: int,
+                   pending: Optional[Dict[int, int]] = None) -> int:
+        """Decode steps this tick: bounded by the tightest remaining
+        budget so no active slot ever writes past its page reservation.
+        ``pending``: per-slot tokens already emitted but not yet committed
+        (the engine's prefill-sampled first tokens) — they count against
+        the budget."""
+        pending = pending or {}
+        rem = [s.remaining - pending.get(i, 0)
+               for i, s in enumerate(self.slots) if s is not None]
+        return min([chunk] + rem) if rem else 0
+
+    def commit(self, slot: int, toks: np.ndarray, eos_id: int) -> None:
+        """Feed one tick's emitted tokens for ``slot``; finishes the slot
+        on EOS or exhausted budget (pages return to the pool)."""
+        st = self.slots[slot]
+        for t in toks:
+            if st.done:
+                break
+            st.tokens.append(int(t))
+            if int(t) == eos_id or len(st.tokens) >= st.max_new:
+                st.done = True
+        if st.done:
+            self.results[st.rid] = np.asarray(st.tokens, np.int32)
+            self.pool.free(self._held.pop(slot))
+            self.slots[slot] = None
+            self.stats["completed"] += 1
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def count_tick(self, steps: int, n_active: Optional[int] = None) -> None:
+        """``n_active``: slots that were active DURING the tick (the caller
+        snapshots it before commits free finished slots)."""
+        if n_active is None:
+            n_active = len(self.active_slots())
+        self.stats["decode_steps"] += steps
+        self.stats["slot_steps"] += steps * self.n_slots
+        self.stats["active_slot_steps"] += steps * n_active
+
+    @property
+    def slot_utilization(self) -> float:
+        """Active-slot decode steps / total slot-steps spent."""
+        tot = self.stats["slot_steps"]
+        return self.stats["active_slot_steps"] / tot if tot else 0.0

@@ -75,6 +75,38 @@ def _check_import_line(line: str, errors: list, where: str):
             errors.append(f"{where}: cannot import {m.group(1)}: {e}")
 
 
+# Serving-knob drift guard: docs quoting these constructors must only use
+# real dataclass fields (catches knob renames — e.g. ServeConfig.page_size
+# or Request.arrival going away while docs still advertise them).
+KWARG_GUARDS = {
+    "ServeConfig": ("repro.serve", "ServeConfig"),
+    "Request": ("repro.serve", "Request"),
+}
+
+
+def _check_guarded_kwargs(body: str, errors: list, where: str):
+    import dataclasses
+    for name, (mod_name, attr) in KWARG_GUARDS.items():
+        hits = re.finditer(
+            name + r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)", body)
+        # strip nested call arguments so e.g. np.array(x, dtype=...) inside
+        # a constructor doesn't contribute its own kwargs
+        args = [re.sub(r"\([^()]*\)", "", m.group(1)) for m in hits]
+        kwargs = {kw for a in args
+                  for kw in re.findall(r"(?<![\w.])(\w+)\s*=", a)}
+        if not kwargs:
+            continue
+        try:
+            cls = getattr(importlib.import_module(mod_name), attr)
+            fields = {f.name for f in dataclasses.fields(cls)}
+        except Exception as e:                              # noqa: BLE001
+            errors.append(f"{where}: cannot resolve {mod_name}.{attr}: {e}")
+            continue
+        for kw in sorted(kwargs - fields):
+            errors.append(f"{where}: {name} has no field {kw!r} "
+                          f"(have {sorted(fields)})")
+
+
 def _module_source(modpath: str):
     """Best-effort source file of ``python -m modpath`` within the repo."""
     for base in ("src", "."):
@@ -143,6 +175,8 @@ def check_docs() -> int:
                 if lang in ("bash", "sh", "shell", ""):
                     if re.search(r"\bpython3?\b", line):
                         _check_command(line.strip(), errors, where)
+            if lang in ("python", "py"):
+                _check_guarded_kwargs(body, errors, f"{rel} (block)")
         # markdown links to local files must resolve
         for m in re.finditer(r"\]\(([\w./-]+\.md)\)", text):
             tgt = os.path.normpath(os.path.join(os.path.dirname(path),

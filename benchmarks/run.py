@@ -211,6 +211,66 @@ def serve_throughput_bench():
     ]
 
 
+def prefix_cache_bench():
+    """Exact shared-prefix cache: warm admissions skip the shared pages.
+
+    A seeded arrival trace where requests share one of two long system
+    prompts (the multi-user serving shape) streams through the continuous
+    engine twice — prefix cache on vs off.  Reports the prefix hit rate,
+    prefill tokens skipped vs prefilled, pages shared vs private vs
+    allocated on demand, preemptions, and cache bytes/token.  Everything
+    asserted-on elsewhere is tick/accounting-based — no wall clock (the
+    interpret-mode caveat)."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.quantize import kv_bytes_per_elem
+    from repro.models import registry
+    from repro.serve import ContinuousEngine, Request, ServeConfig
+
+    cfg = get_config("llama2-60m").smoke()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    slots, max_len, psz = 4, 96, 16
+    rng = np.random.default_rng(0)
+    sys_prompts = [rng.integers(0, cfg.vocab_size, 40) for _ in range(2)]
+    n_req = 10
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prompts[i % 2],
+                         rng.integers(0, cfg.vocab_size,
+                                      int(rng.integers(2, 8)))]),
+                    max_new=int(rng.integers(6, 16)),
+                    arrival=int(i // 2))
+            for i in range(n_req)]
+
+    def serve(prefix_cache):
+        scfg = ServeConfig(batch_size=slots, max_len=max_len, eos_id=-1,
+                           kv_cache_format="nvfp4", page_size=psz,
+                           decode_chunk=8, prefix_cache=prefix_cache)
+        eng = ContinuousEngine(cfg, params, scfg)
+        eng.run(reqs)
+        return eng.scheduler
+
+    warm, cold = serve(True), serve(False)
+    ws, cs = warm.stats, cold.stats
+    kv_elems = 2 * cfg.n_kv_heads * cfg.hd * cfg.n_layers
+    return [
+        ("prefix_cache", "requests_completed", float(ws["completed"])),
+        ("prefix_cache", "hit_rate", warm.prefix_hit_rate),
+        ("prefix_cache", "prefill_tokens_skipped",
+         float(ws["prefix_tokens_skipped"])),
+        ("prefix_cache", "prefill_tokens_warm", float(ws["prefilled_tokens"])),
+        ("prefix_cache", "prefill_tokens_cold", float(cs["prefilled_tokens"])),
+        ("prefix_cache", "pages_shared", float(ws["shared_pages"])),
+        ("prefix_cache", "pages_private", float(ws["private_pages"])),
+        ("prefix_cache", "pages_on_demand", float(ws["demand_pages"])),
+        ("prefix_cache", "preemptions", float(ws["preemptions"])),
+        ("prefix_cache", "cache_bytes_per_token",
+         kv_bytes_per_elem("nvfp4") * kv_elems),
+        ("prefix_cache", "slot_utilization", warm.slot_utilization),
+    ]
+
+
 BENCHES = {
     "fig1": pf.fig1_scale_formats,
     "fig2": pf.fig2_block_sizes,
@@ -223,6 +283,7 @@ BENCHES = {
     "serve_weights": serving_weight_store,
     "kv_cache": kv_cache_bench,
     "serve_throughput": serve_throughput_bench,
+    "prefix_cache": prefix_cache_bench,
 }
 
 QUICK = ("table2", "fig4", "kernels", "fig5", "fig6", "serve_weights",

@@ -55,6 +55,18 @@ def main(argv=None):
                     help="continuous engine decode slots (default: --batch)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (paged cache pool)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="exact shared-prefix cache: admissions that share "
+                         "cached full-page prompt prefixes point at the "
+                         "shared physical pages and prefill only the "
+                         "suffix (dense/moe, non-SWA; implies --queue)")
+    ap.add_argument("--prefix-cache-pages", type=int, default=None,
+                    help="cap on cached prefix pages (LRU-evicted; "
+                         "default: bounded by pool pressure only)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="with --queue: give every synthetic request the "
+                         "same N-token system prompt (exercises the "
+                         "prefix cache)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
 
@@ -72,16 +84,23 @@ def main(argv=None):
     scfg = ServeConfig(batch_size=args.batch, max_len=args.max_len,
                        temperature=args.temperature,
                        kv_cache_format=kv_fmt,
-                       page_size=args.page_size, max_slots=args.max_slots)
+                       page_size=args.page_size, max_slots=args.max_slots,
+                       prefix_cache=args.prefix_cache,
+                       prefix_cache_pages=args.prefix_cache_pages)
     qcfg = fqt.bf16_config() if args.bf16 else None
     rng = np.random.default_rng(0)
+
+    if args.prefix_cache and not args.queue:
+        args.queue = 8          # prefix cache is a continuous-engine knob
 
     if args.queue:
         # continuous batching: staggered arrivals through the scheduler
         eng = ContinuousEngine(cfg, params, scfg, qcfg=qcfg)
+        shared = rng.integers(0, cfg.vocab_size, args.shared_prefix)
         reqs = [Request(rid=i,
-                        prompt=rng.integers(0, cfg.vocab_size,
-                                            args.prompt_len),
+                        prompt=np.concatenate(
+                            [shared, rng.integers(0, cfg.vocab_size,
+                                                  args.prompt_len)]),
                         max_new=args.max_new, arrival=i // 2)
                 for i in range(args.queue)]
         t0 = time.perf_counter()
@@ -92,8 +111,17 @@ def main(argv=None):
         print(f"{ntok} tokens / {st['completed']} requests in {dt:.2f}s "
               f"({ntok / dt:.1f} tok/s incl. compile; slot util "
               f"{eng.scheduler.slot_utilization:.2f}; compiles: "
-              f"prefill {eng.prefill_compiles}, decode "
+              f"prefill {eng.prefill_compiles}+"
+              f"{eng.prefill_suffix_compiles}, decode "
               f"{eng.decode_compiles})")
+        print(f"paging: {st['private_pages']} private + "
+              f"{st['shared_pages']} shared + {st['demand_pages']} on-"
+              f"demand pages; {st['preemptions']} preemptions")
+        if eng.scheduler.prefix_cache is not None:
+            print(f"prefix cache: hit rate "
+                  f"{eng.scheduler.prefix_hit_rate:.2f}, "
+                  f"{st['prefix_tokens_skipped']} prefill tokens skipped, "
+                  f"{st['prefilled_tokens']} prefilled")
         for rid in sorted(res)[:4]:
             print(f"req {rid}: {res[rid][:16].tolist()} ...")
         return

@@ -519,12 +519,26 @@ class PagedKVCache:
         length to ``plen`` (the true prompt length; rows in [plen, Sp) are
         right-pad garbage masked out by ``lengths`` at read time).
         ``Sp <= buf`` so logical indices never collide (static check)."""
+        if k.shape[1] > self.buf:
+            raise ValueError(f"prefill length {k.shape[1]} exceeds slot "
+                             f"capacity {self.buf}")
+        return self.write_prompt_at(slot, k, v, 0, plen)
+
+    def write_prompt_at(self, slot, k: jax.Array, v: jax.Array, start,
+                        plen) -> "PagedKVCache":
+        """Suffix prefill (shared-prefix admission): write a fresh
+        (1, Sp, KVH, D) sequence into ``slot``'s pages at logical
+        positions [start, start + Sp) and set the slot's length to
+        ``plen`` (the TOTAL sequence length — cached prefix + true
+        suffix).  ``start`` may be a traced scalar; right-pad positions
+        that run past the slot buffer are redirected to the trash page
+        so a static pad width never corrupts allocated pages."""
         Sp = k.shape[1]
-        if Sp > self.buf:
-            raise ValueError(f"prefill length {Sp} exceeds slot capacity "
-                             f"{self.buf}")
-        t = jnp.arange(Sp, dtype=jnp.int32)
-        phys = self.page_table[slot, t // self.page_size]       # (Sp,)
+        t = jnp.asarray(start, jnp.int32) + jnp.arange(Sp, dtype=jnp.int32)
+        page = jnp.clip(t // self.page_size, 0,
+                        self.page_table.shape[1] - 1)
+        phys = self.page_table[slot, page]                      # (Sp,)
+        phys = jnp.where(t < self.buf, phys, TRASH_PAGE)
         off = t % self.page_size
         kcod, ksc = _kv_quant_any(k[0], self.fmt, self.block)
         vcod, vsc = _kv_quant_any(v[0], self.fmt, self.block)
@@ -566,6 +580,21 @@ class PagedKVCache:
         def g(pool):
             a = pool[pt]                  # (B, n_pages, page, KVH, ·)
             return a.reshape((pt.shape[0], -1) + pool.shape[2:])
+
+        return (g(self.k_codes), g(self.k_scales),
+                g(self.v_codes), g(self.v_scales))
+
+    def gather_slot(self, slot):
+        """ONE slot's logical (1, buf, KVH, ·) packed views (``slot`` may
+        be traced) — the read side of suffix prefill, which attends a
+        single slot's pages while other slots keep decoding."""
+        row = jax.lax.dynamic_index_in_dim(
+            self.page_table, jnp.asarray(slot, jnp.int32), 0,
+            keepdims=False)               # (n_pages,)
+
+        def g(pool):
+            a = pool[row]                 # (n_pages, page, KVH, ·)
+            return a.reshape((1, -1) + pool.shape[2:])
 
         return (g(self.k_codes), g(self.k_scales),
                 g(self.v_codes), g(self.v_scales))
@@ -706,7 +735,7 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
                rope_theta: float, causal: bool = True,
                window: Optional[int] = None, chunk: int = 1024,
                positions: Optional[jax.Array] = None,
-               cache=None, slot=None, plen=None,
+               cache=None, slot=None, plen=None, pfx=None,
                xkv: Optional[jax.Array] = None,
                norm_eps: float = 1e-5, use_rope: bool = True):
     """Self- (or cross-, via xkv) attention with optional KV cache update.
@@ -723,6 +752,11 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
     that slot's position and attends with per-slot kv_len/q_offset;
     prefill-into-slot (``slot`` given, B=1) writes a fresh right-padded
     prompt into one slot's pages and resets its length to ``plen``.
+    With ``pfx`` (shared-prefix admission) x is only the SUFFIX of the
+    prompt: its K/V rows are written at [pfx, pfx + S) and the queries
+    attend THROUGH the paged cache — the shared prefix pages plus the
+    just-written suffix rows, dequantized on the fly — so one compiled
+    suffix program serves every (pfx, plen) warm admission.
     """
     B, S, d = x.shape
     src = x if xkv is None else xkv
@@ -737,10 +771,13 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
     if positions is None:
         if paged:
             # per-slot positions (continuous batching); a fresh prefill
-            # slot starts at 0
-            positions = (jnp.arange(S, dtype=jnp.int32) if slot is not None
-                         else cache.lengths[:, None]
-                         + jnp.arange(S, dtype=jnp.int32)[None, :])
+            # slot starts at 0, a suffix prefill at the cached prefix
+            if slot is not None:
+                base = 0 if pfx is None else jnp.asarray(pfx, jnp.int32)
+                positions = base + jnp.arange(S, dtype=jnp.int32)
+            else:
+                positions = (cache.lengths[:, None]
+                             + jnp.arange(S, dtype=jnp.int32)[None, :])
         else:
             base = cache.length if cache is not None else 0
             positions = base + jnp.arange(S, dtype=jnp.int32)
@@ -759,7 +796,25 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
     new_cache = None
     if paged and xkv is None:
         buf = cache.buf
-        if slot is not None:
+        if slot is not None and pfx is not None:
+            # SUFFIX prefill (shared-prefix admission, B == 1): the slot's
+            # prefix pages already hold [0, pfx); write the fresh suffix
+            # rows at [pfx, pfx + S) and attend THROUGH the paged cache —
+            # shared prefix + just-written suffix, dequantized on the fly
+            # (right-pad rows land masked or on the trash page).
+            if window is not None:
+                raise NotImplementedError(
+                    "shared-prefix suffix prefill needs a linear cache; "
+                    "SWA rolling buffers rewrite shared pages")
+            total = S if plen is None else plen
+            new_cache = cache.write_prompt_at(slot, k, v, pfx, total)
+            kc, ks, vc, vs = new_cache.gather_slot(slot)
+            o = _attn_decode_fused(
+                q, kc, ks, vc, vs, new_cache.fmt, new_cache.block,
+                qpos=positions, kpos=jnp.arange(buf, dtype=jnp.int32),
+                causal=causal, window=None,
+                kv_len=jnp.asarray(total, jnp.int32), chunk=chunk)
+        elif slot is not None:
             # prefill-into-slot (B == 1): write the fresh sequence into the
             # slot's pages; attend within the fresh tokens directly (right-
             # pad rows are garbage queries whose outputs the caller drops).

@@ -173,6 +173,26 @@ def prefill_slot(params, cfg: ModelConfig, qcfg: QuantConfig, tokens,
         f"state cannot be prefilled from a right-padded static shape)")
 
 
+def prefill_suffix(params, cfg: ModelConfig, qcfg: QuantConfig, tokens,
+                   carry, slot, plen, pfx, *, seed=0):
+    """Prefill ONE slot from a right-padded (1, Sp) prompt SUFFIX whose
+    first ``pfx`` tokens are already cached in shared prefix pages (warm
+    admission, serve/prefix_cache.py).  Returns (logits (1, V), carry).
+
+    Dense/moe transformers only: their self-attention K/V depend causally
+    on prompt tokens alone, so identical prefixes produce bit-identical
+    quantized pages.  The whisper decoder's K/V mix in per-request encoder
+    output (frames) and the recurrent families have no pageable cache —
+    neither can share prefix pages across requests.
+    """
+    if cfg.family in ("dense", "moe"):
+        return transformer.prefill_suffix(params, cfg, qcfg, tokens, carry,
+                                          slot, plen, pfx, seed=seed)
+    raise NotImplementedError(
+        f"prefill_suffix: family {cfg.family!r} cannot share prefix pages "
+        f"(K/V are not a pure function of the prompt prefix)")
+
+
 def decode_step(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, carry,
                 *, seed=0):
     if cfg.family in _TRANSFORMER_FAMILIES:

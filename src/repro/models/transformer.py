@@ -55,7 +55,7 @@ def init(cfg: ModelConfig, key, dtype=jnp.bfloat16):
 
 
 def _layer_apply(cfg: ModelConfig, lp, x, seed, *, positions, cache,
-                 qcfg: QuantConfig, slot=None, plen=None):
+                 qcfg: QuantConfig, slot=None, plen=None, pfx=None):
     ctx = QCtx(qcfg, seed)
     x = constrain(x, "res")
     h, new_cache = attn_apply(
@@ -63,7 +63,7 @@ def _layer_apply(cfg: ModelConfig, lp, x, seed, *, positions, cache,
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
         rope_theta=cfg.rope_theta, window=cfg.sliding_window,
         chunk=cfg.attn_chunk, positions=positions, cache=cache,
-        slot=slot, plen=plen, norm_eps=cfg.norm_eps)
+        slot=slot, plen=plen, pfx=pfx, norm_eps=cfg.norm_eps)
     x = x + h
     hin = rmsnorm(x, lp["ln2"], cfg.norm_eps)
     if cfg.n_experts:
@@ -78,7 +78,7 @@ def _layer_apply(cfg: ModelConfig, lp, x, seed, *, positions, cache,
 
 def apply_layers(params, cfg: ModelConfig, qcfg: QuantConfig, x, seed, *,
                  positions=None, caches=None, remat: bool = False,
-                 slot=None, plen=None):
+                 slot=None, plen=None, pfx=None):
     """Scan the stacked layers.  Returns (x, new_caches, aux_loss_sum)."""
     L = cfg.n_layers
     seeds = jnp.asarray(seed, jnp.uint32) + jnp.arange(
@@ -87,7 +87,8 @@ def apply_layers(params, cfg: ModelConfig, qcfg: QuantConfig, x, seed, *,
     def body(x, per_layer):
         lp, s, c = per_layer
         y, nc, aux = _layer_apply(cfg, lp, x, s, positions=positions,
-                                  cache=c, qcfg=qcfg, slot=slot, plen=plen)
+                                  cache=c, qcfg=qcfg, slot=slot, plen=plen,
+                                  pfx=pfx)
         return y, (nc, aux)
 
     if remat:
@@ -162,6 +163,32 @@ def prefill_slot(params, cfg: ModelConfig, qcfg: QuantConfig, tokens,
                                     remat=False, slot=slot, plen=plen)
     x = jax.lax.dynamic_slice_in_dim(
         x, jnp.asarray(plen, jnp.int32) - 1, 1, axis=1)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _logits(params, cfg, qcfg, x, seed)[:, 0], new_caches
+
+
+def prefill_suffix(params, cfg: ModelConfig, qcfg: QuantConfig, tokens,
+                   caches, slot, plen, pfx, *, seed=0):
+    """Prefill ONE paged slot from a right-padded (1, Sp) prompt SUFFIX
+    whose prefix of ``pfx`` tokens is already cached in the slot's shared
+    pages (warm shared-prefix admission).
+
+    ``plen`` is the TOTAL prompt length (prefix + true suffix); both it
+    and ``pfx`` are dynamic scalars, so one compiled program serves every
+    warm admission.  Suffix K/V rows are written at logical positions
+    [pfx, plen); the queries attend through the paged cache (dequantized
+    shared prefix + fresh suffix).  Returns
+    (logits_at_last_prompt_token (1, V), caches)."""
+    x = params["embed"][tokens]
+    positions = (jnp.asarray(pfx, jnp.int32)
+                 + jnp.arange(x.shape[1], dtype=jnp.int32))
+    x, new_caches, _ = apply_layers(params, cfg, qcfg, x, seed,
+                                    positions=positions, caches=caches,
+                                    remat=False, slot=slot, plen=plen,
+                                    pfx=pfx)
+    x = jax.lax.dynamic_slice_in_dim(
+        x, jnp.asarray(plen, jnp.int32) - jnp.asarray(pfx, jnp.int32) - 1,
+        1, axis=1)
     x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
     return _logits(params, cfg, qcfg, x, seed)[:, 0], new_caches
 

@@ -2,4 +2,5 @@ from repro.serve import packing
 from repro.serve.engine import (ContinuousEngine, Engine, ServeConfig,
                                 serve_step_fn)
 from repro.serve.packing import pack_model_params, weight_store_bytes
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import PagePool, Request, Scheduler

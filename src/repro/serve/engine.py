@@ -13,12 +13,16 @@ Two engines share the packed-weight/packed-cache machinery:
     reference for the continuous engine.
   * ``ContinuousEngine`` — vLLM-style CONTINUOUS batching over a paged
     NVFP4 KV cache.  Request lifecycle (admission queue, per-slot lengths,
-    slot free/reuse on EOS/max_len, page reservations) lives in
-    ``serve/scheduler.py`` on the host; the device side is EXACTLY TWO
-    jitted programs with static shapes —
+    slot free/reuse on EOS/max_len, demand-driven paging + preemption,
+    the exact shared-prefix cache) lives in ``serve/scheduler.py`` on the
+    host; the device side is EXACTLY THREE jitted programs with static
+    shapes —
 
         prefill-into-slot : right-padded (1, prefill_len) prompt into one
                             slot's pages (dynamic slot/plen operands)
+        prefill-suffix    : warm shared-prefix admission — only the
+                            prompt SUFFIX (dynamic pfx/plen/slot), the
+                            prefix pages are shared from the prefix cache
         batched decode    : one token for every slot, per-slot
                             kv_len/q_offset VECTOR operands
 
@@ -75,6 +79,12 @@ class ServeConfig:
                                        # from the submitted trace)
     decode_chunk: int = 8         # decode steps per scheduler tick — the
                                   # host-sync cadence for BOTH engines
+    # exact shared-prefix cache (serve/prefix_cache.py): admissions whose
+    # prompt shares cached full pages point their page-table rows at the
+    # shared physical pages and prefill only the suffix.  Dense/moe,
+    # linear (non-SWA) caches only.
+    prefix_cache: bool = False
+    prefix_cache_pages: Optional[int] = None   # cap on cached pages (LRU)
 
 
 def _sample(logits: jax.Array, key, scfg: ServeConfig) -> jax.Array:
@@ -214,9 +224,16 @@ class ContinuousEngine:
                else min(scfg.max_len, cfg.sliding_window))
         self.slot_buf = -(-buf // psz) * psz   # logical tokens per slot
         self.n_pages_slot = self.slot_buf // psz
+        if scfg.prefix_cache and (cfg.family not in ("dense", "moe")
+                                  or cfg.sliding_window is not None):
+            raise NotImplementedError(
+                "prefix_cache needs prompt-pure K/V and a linear cache: "
+                "dense/moe families without a sliding window")
         self._root = jax.random.PRNGKey(scfg.seed)
 
         self._prefill = jax.jit(self._prefill_impl, donate_argnums=(4,))
+        self._prefill_sfx = jax.jit(self._prefill_suffix_impl,
+                                    donate_argnums=(5,))
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
 
     # ---- the two compiled programs ----------------------------------------
@@ -233,6 +250,17 @@ class ContinuousEngine:
         logits, carry = registry.prefill_slot(
             self.params, self.cfg, self.qcfg, tokens, carry, slot, plen,
             extras=extras)
+        tok = _sample(logits, self._request_key(rid, 0), self.scfg)[0]
+        return tok, _greedy_margin(logits)[0], carry
+
+    def _prefill_suffix_impl(self, tokens, plen, pfx, slot, rid, carry):
+        """Warm-prefix prefill: the slot's page row already shares the
+        cached prefix pages; write + attend only the SUFFIX of the prompt
+        (right-padded (1, prefill_len), dynamic pfx/plen/slot/rid
+        operands — one compiled program serves every warm admission)."""
+        logits, carry = registry.prefill_suffix(
+            self.params, self.cfg, self.qcfg, tokens, carry, slot, plen,
+            pfx)
         tok = _sample(logits, self._request_key(rid, 0), self.scfg)[0]
         return tok, _greedy_margin(logits)[0], carry
 
@@ -256,6 +284,10 @@ class ContinuousEngine:
     @property
     def prefill_compiles(self) -> int:
         return self._prefill._cache_size()
+
+    @property
+    def prefill_suffix_compiles(self) -> int:
+        return self._prefill_sfx._cache_size()
 
     @property
     def decode_compiles(self) -> int:
@@ -310,7 +342,9 @@ class ContinuousEngine:
         extras = extras or {}
         sched = Scheduler(self.n_slots, scfg.max_len, scfg.page_size,
                           total_pages=scfg.total_pages,
-                          slot_pages=self.n_pages_slot)
+                          slot_pages=self.n_pages_slot,
+                          prefix_cache=scfg.prefix_cache,
+                          prefix_cache_pages=scfg.prefix_cache_pages)
         self.scheduler = sched
         for r in requests:
             sched.submit(r)
@@ -334,14 +368,29 @@ class ContinuousEngine:
         tick = 0
         while sched.has_work():
             # -- admissions (host): pages + slot, then ONE prefill program
-            for slot, req, row in sched.admit(tick):
+            # (warm shared-prefix admissions run the SUFFIX program; a
+            # later admission in the same batch may share pages a prior
+            # one writes, so prefills run strictly in placed order)
+            for slot, req, row, pfx in sched.admit(tick):
                 carry = self._set_page_row(carry, slot, row)
                 padded = np.zeros((1, prefill_pad), np.int32)
-                padded[0, :len(req.prompt)] = req.prompt
-                tok, margin, carry = self._prefill(
-                    jnp.asarray(padded), jnp.asarray(len(req.prompt)),
-                    jnp.asarray(slot), jnp.asarray(req.rid), carry,
-                    extras.get(req.rid, {}))
+                sfx = np.asarray(req.prompt[pfx:], np.int32)
+                padded[0, :len(sfx)] = sfx
+                if sched.prefix_cache is not None:
+                    # prefix-cache mode: EVERY admission (cold: pfx == 0)
+                    # runs the quantize-then-attend suffix program, so the
+                    # suffix hidden states are a pure function of the
+                    # quantized pages — warm admission is BIT-IDENTICAL to
+                    # a cold start of the same prompt, for every page fmt
+                    tok, margin, carry = self._prefill_sfx(
+                        jnp.asarray(padded), jnp.asarray(len(req.prompt)),
+                        jnp.asarray(pfx), jnp.asarray(slot),
+                        jnp.asarray(req.rid), carry)
+                else:
+                    tok, margin, carry = self._prefill(
+                        jnp.asarray(padded), jnp.asarray(len(req.prompt)),
+                        jnp.asarray(slot), jnp.asarray(req.rid), carry,
+                        extras.get(req.rid, {}))
                 slot_rid[slot] = req.rid
                 rids = rids.at[slot].set(req.rid)
                 steps = steps.at[slot].set(1)
@@ -356,6 +405,19 @@ class ContinuousEngine:
             active = sched.active_slots()
             T = sched.tick_steps(scfg.decode_chunk,
                                  {s: 1 for s in pending})
+            # demand-driven paging: grow rows for this tick's writes; on
+            # pool exhaustion the youngest slot is preempted (requeued,
+            # its pages released) — drop its host state and trash its row
+            growth, preempted = sched.ensure_capacity(T)
+            for slot, row in growth:
+                carry = self._set_page_row(carry, slot, row)
+            for slot in preempted:
+                carry = self._set_page_row(carry, slot, trash_row)
+                self.margins.pop(slot_rid[slot], None)
+                slot_rid[slot] = None
+                pending.pop(slot, None)
+                slot_fed.pop(slot, None)
+            active = [s for s in active if s not in preempted]
             picks, margs = [], []
             for _ in range(T):
                 nxt, margin, steps, carry = self._decode(tokens, carry,
@@ -397,6 +459,7 @@ class ContinuousEngine:
 
         self.margins = {rid: np.asarray(ms, np.float32)
                         for rid, ms in self.margins.items()}
+        self._last_carry = carry    # kept for page-table invariant tests
         return dict(sched.results)
 
     def generate(self, prompts: List[np.ndarray],

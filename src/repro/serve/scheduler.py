@@ -3,21 +3,30 @@
 The serving stack splits into two layers:
 
   * THIS module — everything request-shaped and dynamic: the admission
-    queue, the shared page pool, per-slot sequence state (request id,
-    prompt length, tokens generated, per-request sampling stream), slot
-    free/reuse on EOS/max_new.  Nothing here touches jax; decisions are
+    queue, the shared refcounted page pool, per-slot sequence state
+    (request id, prompt length, tokens generated, per-request sampling
+    stream), slot free/reuse on EOS/max_new, demand-driven page growth
+    with deterministic preemption, and the exact shared-prefix cache
+    (serve/prefix_cache.py).  Nothing here touches jax; decisions are
     made once per scheduler TICK, not per token.
-  * ``serve/engine.ContinuousEngine`` — exactly two jitted programs with
-    static shapes (prefill-into-slot, batched decode over all slots) whose
-    dynamic state (page table, per-slot lengths, request ids) lives in
-    device operands, so admission into a freed slot never recompiles.
+  * ``serve/engine.ContinuousEngine`` — exactly three jitted programs
+    with static shapes (prefill-into-slot, suffix prefill for warm
+    prefixes, batched decode over all slots) whose dynamic state (page
+    table, per-slot lengths, request ids) lives in device operands, so
+    admission into a freed slot never recompiles.
 
-Paging: a request needs ``ceil((plen + max_new) / page_size)`` pages for
-its whole lifetime, reserved at admission — so the jitted decode loop
-never allocates, and admission is simply "a slot is free AND the pool has
-enough pages".  Physical page 0 is the TRASH page (layers.TRASH_PAGE):
-freed slots' table rows point at it, which lets the static decode program
-keep writing for inactive slots without corrupting reallocated pages.
+Paging is DEMAND-DRIVEN (vLLM-style): admission allocates only the
+pages covering the prompt — ``ceil(plen / page_size)`` minus whatever a
+prefix-cache hit shares — and each decode tick grows every active slot
+just far enough for that tick's writes (``Scheduler.ensure_capacity``).
+On pool exhaustion the scheduler first evicts LRU refcount-0 prefix-
+cache pages, then PREEMPTS the youngest active slot (its private pages
+return to the pool, its request requeues at the head of the FIFO —
+deterministic, and with per-request sampling streams the re-run
+regenerates the identical token stream).  Physical page 0 is the TRASH
+page (layers.TRASH_PAGE): freed slots' table rows point at it, which
+lets the static decode program keep writing for inactive slots without
+corrupting reallocated pages.
 """
 from __future__ import annotations
 
@@ -28,6 +37,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.models.layers import TRASH_PAGE
+from repro.serve.prefix_cache import PrefixCache
 
 
 @dataclasses.dataclass
@@ -48,6 +58,7 @@ class SlotState:
     max_new: int
     tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    written: int = 0        # cache rows written so far (prefill + decode)
 
     @property
     def remaining(self) -> int:
@@ -55,29 +66,68 @@ class SlotState:
 
 
 class PagePool:
-    """Free-list allocator over the physical page pool (page 0 = trash)."""
+    """Refcounted allocator over the physical page pool (page 0 = trash).
+
+    ``alloc`` hands out pages at refcount 1; ``ref`` adds a holder (a
+    slot sharing a cached prefix page, or the prefix cache adopting a
+    slot's page); ``free`` drops one reference per page and returns the
+    page to the free list only when nobody holds it.  Double-frees and
+    out-of-range ids raise — silent acceptance masks page-table
+    corruption (a freed page reused by another slot while a stale row
+    still points at it).
+    """
 
     def __init__(self, total_pages: int):
         if total_pages < 2:
             raise ValueError("page pool needs >= 2 pages (1 is the trash "
                              "page)")
+        self.total_pages = total_pages
         self._free = list(range(total_pages - 1, 0, -1))   # LIFO; skip trash
+        self._refs: Dict[int, int] = {}                    # page -> holders
 
     @property
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def pages_in_use(self) -> int:
+        return len(self._refs)
+
+    def _check(self, page: int) -> None:
+        if page == TRASH_PAGE:
+            raise ValueError("cannot free/ref the trash page")
+        if not (0 < page < self.total_pages):
+            raise ValueError(f"page {page} out of range "
+                             f"(pool has {self.total_pages} pages)")
+
+    def refcount(self, page: int) -> int:
+        self._check(page)
+        return self._refs.get(page, 0)
+
     def alloc(self, n: int) -> Optional[List[int]]:
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = 1
         return pages
+
+    def ref(self, page: int) -> None:
+        self._check(page)
+        if page not in self._refs:
+            raise ValueError(f"page {page} is not allocated (cannot add a "
+                             f"reference to a free page)")
+        self._refs[page] += 1
 
     def free(self, pages: List[int]) -> None:
         for p in pages:
-            if p == TRASH_PAGE:
-                raise ValueError("cannot free the trash page")
-        self._free.extend(pages)
+            self._check(p)
+            if p not in self._refs:
+                raise ValueError(f"double free of page {p} (not allocated)")
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
 
 
 class Scheduler:
@@ -85,17 +135,23 @@ class Scheduler:
 
     The engine drives it tick by tick:
       1. ``submit`` requests (any time; ``arrival`` gates admission);
-      2. ``admit(tick)`` -> [(slot, Request, page_row)] newly placed
-         requests (the engine prefills each into its slot);
-      3. decode for ``tick_steps()`` steps, then feed the emitted tokens
+      2. ``admit(tick)`` -> [(slot, Request, page_row, pfx)] newly placed
+         requests; ``pfx`` is the shared-prefix token count (0 = cold) —
+         the engine prefills only the suffix;
+      3. ``ensure_capacity(T)`` grows page rows for the tick's decode
+         writes (may evict cached pages / preempt the youngest slot);
+      4. decode for ``tick_steps()`` steps, then feed the emitted tokens
          back via ``commit(slot, toks)``;
-      4. finished slots are released (pages back to the pool) and show up
-         as results.
+      5. finished slots are released (pages back to the pool — shared
+         pages stay alive while the prefix cache or other slots hold
+         them) and show up as results.
     """
 
     def __init__(self, n_slots: int, max_len: int, page_size: int,
                  total_pages: Optional[int] = None,
-                 slot_pages: Optional[int] = None):
+                 slot_pages: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_pages: Optional[int] = None):
         self.n_slots = n_slots
         self.max_len = max_len
         self.page_size = page_size
@@ -110,13 +166,24 @@ class Scheduler:
                 f"slot reservation ({self.n_pages_slot} pages)")
         self.pool = PagePool(total_pages)
         self.total_pages = total_pages
+        self.prefix_cache: Optional[PrefixCache] = (
+            PrefixCache(self.pool, page_size, prefix_cache_pages)
+            if prefix_cache else None)
         self.queue: deque = deque()
         self.slots: List[Optional[SlotState]] = [None] * n_slots
-        self._held: Dict[int, List[int]] = {}          # slot -> pages
+        self._held: Dict[int, List[int]] = {}      # slot -> referenced pages
+        self._rows: Dict[int, np.ndarray] = {}     # slot -> page-table row
+        self._npages: Dict[int, int] = {}          # slot -> allocated pages
+        self._reqs: Dict[int, Request] = {}        # slot -> live Request
+        self._adm_seq: Dict[int, int] = {}         # slot -> admission seq
+        self._seq = 0
         self.results: Dict[int, np.ndarray] = {}
         # counters for the throughput bench / tests
         self.stats = {"admitted": 0, "completed": 0, "decode_steps": 0,
-                      "slot_steps": 0, "active_slot_steps": 0}
+                      "slot_steps": 0, "active_slot_steps": 0,
+                      "prefilled_tokens": 0, "prefix_tokens_skipped": 0,
+                      "shared_pages": 0, "private_pages": 0,
+                      "demand_pages": 0, "preemptions": 0}
 
     # ---- submission / admission -----------------------------------------
 
@@ -129,10 +196,28 @@ class Scheduler:
             raise ValueError(f"request {req.rid}: max_new must be >= 1")
         self.queue.append(req)
 
-    def admit(self, tick: int) -> List[Tuple[int, Request, np.ndarray]]:
+    def _alloc_or_evict(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` pages; on exhaustion, evict LRU prefix-cache
+        pages first (pool pressure beats cache warmth), then retry."""
+        pages = self.pool.alloc(n)
+        if pages is None and self.prefix_cache is not None:
+            self.prefix_cache.evict(n - self.pool.free_pages)
+            pages = self.pool.alloc(n)
+        return pages
+
+    def admit(self, tick: int) -> List[Tuple[int, Request, np.ndarray, int]]:
         """Place queued requests (arrival <= tick) into free slots while
-        the pool can reserve their pages.  FIFO head-of-line: the queue is
-        not reordered around a request that doesn't fit yet."""
+        the pool can cover their prompts.  FIFO head-of-line: the queue is
+        not reordered around a request that doesn't fit yet.
+
+        With the prefix cache on, the longest cached full-page prefix of
+        the prompt is SHARED: the slot's page-table row points at the
+        cached physical pages (one pool reference each) and only the
+        suffix needs private pages + prefill.  The match is capped at
+        ``plen - 1`` tokens so the suffix is never empty (the engine
+        still needs the last prompt token's logits to sample from); the
+        partial tail page is always recomputed into a private page.
+        """
         placed = []
         for slot in range(self.n_slots):
             if not self.queue or self.slots[slot] is not None:
@@ -140,22 +225,128 @@ class Scheduler:
             req = self.queue[0]
             if req.arrival > tick:
                 break
-            # SWA slots roll: a request never touches more than the slot's
-            # own page row, however long it runs
-            need = min(-(-(len(req.prompt) + req.max_new) // self.page_size),
-                       self.n_pages_slot)
-            pages = self.pool.alloc(need)
-            if pages is None:
+            plen = len(req.prompt)
+            # demand-driven: only the PROMPT's pages at admission; decode
+            # pages come from ensure_capacity tick by tick
+            prompt_pages = min(max(1, -(-plen // self.page_size)),
+                               self.n_pages_slot)
+            shared: List[int] = []
+            if self.prefix_cache is not None and plen > 1:
+                shared = self.prefix_cache.match(req.prompt)
+                shared = shared[:(plen - 1) // self.page_size]
+            pfx = len(shared) * self.page_size
+            # pin the matched pages BEFORE allocating: at refcount 1 the
+            # eviction inside _alloc_or_evict could reclaim them and hand
+            # them straight back as this request's private pages (one
+            # physical page aliased as both prefix and suffix)
+            for p in shared:
+                self.pool.ref(p)
+            priv = self._alloc_or_evict(prompt_pages - len(shared))
+            if priv is None:
+                # waiting is safe, not livelock: the pin cannot starve the
+                # pool on its own (every non-pinned cache node is
+                # evictable and usable pages >= n_pages_slot >=
+                # prompt_pages), so failure means other ACTIVE slots hold
+                # the pages — and they always finish
+                self.pool.free(shared)          # unpin; retry next tick
                 break
             self.queue.popleft()
-            self.slots[slot] = SlotState(req.rid, len(req.prompt),
-                                         req.max_new)
-            self._held[slot] = pages
+            st = SlotState(req.rid, plen, req.max_new, written=plen)
+            self.slots[slot] = st
+            self._reqs[slot] = req
+            self._adm_seq[slot] = self._seq
+            self._seq += 1
+            self._held[slot] = list(shared) + priv
+            self._npages[slot] = prompt_pages
             row = np.full((self.n_pages_slot,), TRASH_PAGE, np.int32)
-            row[:need] = pages
+            row[:len(shared)] = shared
+            row[len(shared):prompt_pages] = priv
+            self._rows[slot] = row
+            if self.prefix_cache is not None:
+                self.prefix_cache.count(len(shared))
+                # register this prompt's full pages for future admissions
+                # (contents land during this admission's prefill, before
+                # any later prefill could read them — admissions are
+                # prefilled in ``placed`` order)
+                self.prefix_cache.insert(req.prompt, row)
             self.stats["admitted"] += 1
-            placed.append((slot, req, row))
+            self.stats["prefilled_tokens"] += plen - pfx
+            self.stats["prefix_tokens_skipped"] += pfx
+            self.stats["shared_pages"] += len(shared)
+            self.stats["private_pages"] += len(priv)
+            placed.append((slot, req, row.copy(), pfx))
         return placed
+
+    # ---- demand-driven page growth / preemption --------------------------
+
+    def _youngest_active(self) -> Optional[int]:
+        live = [s for s, st in enumerate(self.slots) if st is not None]
+        if not live:
+            return None
+        return max(live, key=lambda s: self._adm_seq[s])
+
+    def _preempt(self, slot: int) -> None:
+        """Release ``slot`` and requeue its request at the FIFO head.
+        Deterministic recompute-style preemption: generated tokens are
+        discarded; per-request sampling streams (keyed by rid, step)
+        regenerate the identical stream on re-admission."""
+        req = self._reqs.pop(slot)
+        self.pool.free(self._held.pop(slot))
+        self.slots[slot] = None
+        self._rows.pop(slot)
+        self._npages.pop(slot)
+        self._adm_seq.pop(slot)
+        self.queue.appendleft(req)
+        self.stats["preemptions"] += 1
+
+    def ensure_capacity(self, steps: int
+                        ) -> Tuple[List[Tuple[int, np.ndarray]], List[int]]:
+        """Grow every active slot's page row to cover this tick's
+        ``steps`` decode writes.  Returns (growth, preempted): ``growth``
+        is [(slot, new_row)] page-table updates for the engine; pool
+        exhaustion evicts prefix-cache pages first, then preempts the
+        youngest active slot until the survivors fit (the oldest slot is
+        never preempted, so the trace always progresses)."""
+        growth: List[Tuple[int, np.ndarray]] = []
+        preempted: List[int] = []
+        if steps > 0:
+            for slot in range(self.n_slots):
+                while self.slots[slot] is not None:
+                    st = self.slots[slot]
+                    last = st.written + steps - 1       # last pos written
+                    want = min(last // self.page_size + 1, self.n_pages_slot)
+                    n_new = want - self._npages[slot]
+                    if n_new <= 0:
+                        break
+                    pages = self._alloc_or_evict(n_new)
+                    if pages is not None:
+                        row = self._rows[slot]
+                        row[self._npages[slot]:want] = pages
+                        self._held[slot].extend(pages)
+                        self._npages[slot] = want
+                        self.stats["demand_pages"] += n_new
+                        growth.append((slot, row.copy()))
+                        break
+                    victim = self._youngest_active()
+                    if victim is None or victim == slot == \
+                            self._oldest_active():
+                        raise RuntimeError(
+                            "page pool too small for a single request "
+                            "(ensure_capacity cannot free more pages)")
+                    self._preempt(victim)
+                    preempted.append(victim)
+                    if victim == slot:
+                        break
+        for st in self.slots:
+            if st is not None:
+                st.written += max(0, steps)
+        return growth, preempted
+
+    def _oldest_active(self) -> Optional[int]:
+        live = [s for s, st in enumerate(self.slots) if st is not None]
+        if not live:
+            return None
+        return min(live, key=lambda s: self._adm_seq[s])
 
     # ---- decode bookkeeping ----------------------------------------------
 
@@ -165,7 +356,7 @@ class Scheduler:
     def tick_steps(self, chunk: int,
                    pending: Optional[Dict[int, int]] = None) -> int:
         """Decode steps this tick: bounded by the tightest remaining
-        budget so no active slot ever writes past its page reservation.
+        budget so no active slot ever writes past its logical capacity.
         ``pending``: per-slot tokens already emitted but not yet committed
         (the engine's prefill-sampled first tokens) — they count against
         the budget."""
@@ -176,7 +367,8 @@ class Scheduler:
 
     def commit(self, slot: int, toks: np.ndarray, eos_id: int) -> None:
         """Feed one tick's emitted tokens for ``slot``; finishes the slot
-        on EOS or exhausted budget (pages return to the pool)."""
+        on EOS or exhausted budget (page references return to the pool —
+        pages shared with the prefix cache or other slots stay alive)."""
         st = self.slots[slot]
         for t in toks:
             if st.done:
@@ -188,6 +380,10 @@ class Scheduler:
             self.results[st.rid] = np.asarray(st.tokens, np.int32)
             self.pool.free(self._held.pop(slot))
             self.slots[slot] = None
+            self._rows.pop(slot)
+            self._npages.pop(slot)
+            self._reqs.pop(slot)
+            self._adm_seq.pop(slot)
             self.stats["completed"] += 1
 
     def has_work(self) -> bool:
@@ -207,3 +403,10 @@ class Scheduler:
         """Active-slot decode steps / total slot-steps spent."""
         tot = self.stats["slot_steps"]
         return self.stats["active_slot_steps"] / tot if tot else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Admissions that reused at least one cached prefix page."""
+        adm = self.stats["admitted"]
+        pc = self.prefix_cache
+        return (pc.stats["hits"] / adm) if (pc and adm) else 0.0

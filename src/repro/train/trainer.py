@@ -22,6 +22,7 @@ nodes (DESIGN.md §6):
 from __future__ import annotations
 
 import dataclasses
+import os
 import signal
 import time
 from typing import Any, Dict, List, Optional
@@ -46,6 +47,10 @@ class TrainerConfig:
     log_every: int = 10
     straggler_factor: float = 3.0
     qaf: qaf.QAFConfig = dataclasses.field(default_factory=qaf.QAFConfig)
+    # emit the quantize-once packed NVFP4 serving artifact at the end of
+    # the run (<ckpt_dir>/serve_packed) — deploys restore 4-bit weights
+    # directly into the Engine and never touch the bf16 training params
+    export_packed: bool = True
 
 
 class Trainer:
@@ -144,7 +149,32 @@ class Trainer:
         if self.run_cfg.ckpt_dir and (self._stop or True):
             ckpt.save(self.run_cfg.ckpt_dir, int(state.step), state,
                       keep=self.run_cfg.keep_ckpts)
+            if self.run_cfg.export_packed:
+                self.export_serving_artifact(state)
         return state
+
+    def export_serving_artifact(self, state) -> Optional[str]:
+        """Quantize-once export: pack every GEMM weight with THIS run's
+        forward weight spec (its QAF/serving numerics) and checkpoint the
+        packed tree under ``<ckpt_dir>/serve_packed`` — 4-bit on disk,
+        restored directly into ``serve.Engine(..., pack_weights=False)``
+        so deploys never touch the bf16 training weights.  Runs with no
+        quantized forward (the bf16 baseline) export nothing: there is no
+        packed-serving story for them."""
+        if not self.run_cfg.ckpt_dir:
+            return None
+        spec = qaf.qaf_quant_config(self.qcfg).fwd_w
+        if spec is None:
+            return None
+        from repro.serve.packing import pack_model_params
+        packed = pack_model_params(self.cfg, state.params, spec)
+        path = ckpt.save(os.path.join(self.run_cfg.ckpt_dir,
+                                      "serve_packed"),
+                         int(state.step), packed,
+                         keep=self.run_cfg.keep_ckpts)
+        self.events.append({"kind": "export_packed",
+                            "step": int(state.step)})
+        return path
 
     # ---- reporting -------------------------------------------------------
 

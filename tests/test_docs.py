@@ -38,3 +38,22 @@ def test_docs_check_catches_drift():
 def test_check_env_deps_mode_still_works(capsys):
     assert check_env.main([]) == 0
     assert "python" in capsys.readouterr().out
+
+
+def test_check_env_serve_mode(capsys):
+    """--serve: host-side scheduler invariants (refcount conservation,
+    radix-tree bookkeeping, no page leaked after a full cycle)."""
+    assert check_env.main(["--serve"]) == 0, capsys.readouterr().out
+    assert "serving scheduler invariants" in capsys.readouterr().out
+
+
+def test_docs_guard_checks_prefix_cache_kwargs():
+    """KWARG_GUARDS covers PrefixCache (a plain class — signature-based)
+    and still catches a fictitious knob."""
+    errs = []
+    check_env._check_guarded_kwargs(
+        "pc = PrefixCache(pool, page_size=16, max_pages=64)", errs, "t")
+    assert errs == [], errs
+    check_env._check_guarded_kwargs(
+        "pc = PrefixCache(pool, page_size=16, no_such_knob=1)", errs, "t")
+    assert len(errs) == 1 and "no_such_knob" in errs[0]

@@ -2,8 +2,10 @@
 token-identity, and the paged Pallas kernel.
 
 Layers of evidence:
-  * host-side scheduler invariants: FIFO admission, page-pool reservation
-    blocking, slot free/reuse, deterministic tick accounting (no jax);
+  * host-side scheduler invariants: FIFO admission, page-pool blocking on
+    prompt pages (demand paging — see tests/test_prefix_cache.py for
+    growth/preemption), slot free/reuse, deterministic tick accounting
+    (no jax);
   * the paged cache's writes/reads match the non-paged packed cache
     bit-tight, and the per-slot fused read matches the ``ref.py`` paged
     oracle (as does ``flash_attention_paged`` in interpret mode, across
@@ -68,7 +70,10 @@ def test_scheduler_admission_and_reuse():
     assert [p[0] for p in placed] == [0, 1]          # FIFO into slots 0, 1
     assert sched.admit(tick=0) == []                 # rid 2 queued: no slot
     row0 = placed[0][2]
-    assert row0.shape == (4,) and (row0[:2] != TRASH_PAGE).all()
+    # demand-driven paging: admission covers the PROMPT only (1 page for
+    # plen 8); decode pages arrive tick by tick via ensure_capacity
+    assert row0.shape == (4,) and (row0[:1] != TRASH_PAGE).all()
+    assert (row0[1:] == TRASH_PAGE).all()
     # finish slot 0 -> pages return, rid 2 admitted into the freed slot
     sched.commit(0, np.asarray([5, 1]), eos_id=1)
     assert sched.slots[0] is None and 0 in sched.results
@@ -77,14 +82,15 @@ def test_scheduler_admission_and_reuse():
 
 
 def test_scheduler_blocks_on_pages_not_just_slots():
-    # pool sized for ONE full reservation: second request must wait even
-    # though a slot is free
+    # pool sized so the first PROMPT leaves too few pages for the second:
+    # the second request must wait even though a slot is free (demand
+    # paging blocks admission on prompt pages, not the full lifetime)
     sched = Scheduler(n_slots=2, max_len=32, page_size=8, total_pages=5)
-    sched.submit(Request(0, np.zeros(16, np.int32), 16, 0))
-    sched.submit(Request(1, np.zeros(16, np.int32), 16, 0))
+    sched.submit(Request(0, np.zeros(24, np.int32), 8, 0))    # 3 pages
+    sched.submit(Request(1, np.zeros(16, np.int32), 16, 0))   # 2 pages
     assert [p[0] for p in sched.admit(0)] == [0]
-    assert sched.admit(0) == []                      # pages exhausted
-    sched.commit(0, np.asarray([7] * 16), eos_id=NO_EOS)
+    assert sched.admit(0) == []                      # 1 free page < 2
+    sched.commit(0, np.asarray([7] * 8), eos_id=NO_EOS)
     assert [p[0] for p in sched.admit(0)] == [0]     # now it fits
 
 

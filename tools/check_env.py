@@ -1,7 +1,8 @@
-"""Environment preflight + docs-drift guard.
+"""Environment preflight + docs-drift guard + serving self-check.
 
   PYTHONPATH=src python tools/check_env.py          # dependency report
   PYTHONPATH=src python tools/check_env.py --docs   # docs snippet check
+  PYTHONPATH=src python tools/check_env.py --serve  # scheduler invariants
 
 Default mode prints one line per dependency so a red test run can be
 triaged at a glance instead of letting pytest collection explode on an
@@ -12,8 +13,15 @@ hypothesis); missing REQUIRED deps exit non-zero.
 they have not drifted from the code: every ``import``/``from repro...``
 line must import (and every imported name must exist), every file path
 mentioned in a command must exist, every ``--flag`` of a quoted command
-must appear in the invoked module's source, and every ``--bench NAME``
-must be a registered benchmark.  Wired into tier-1 as a fast test
+must appear in the invoked module's source, every ``--bench NAME`` must
+be a registered benchmark, and constructors named in ``KWARG_GUARDS``
+(ServeConfig/Request/PrefixCache) must only be quoted with real
+fields/parameters.  Wired into tier-1 as a fast test (tests/test_docs.py).
+
+``--serve`` is a jax-free self-check of the serving scheduler's host
+machinery: it builds a tiny refcounted page pool + prefix-cache radix
+tree and drives a full submit/admit/grow/decode/free cycle, asserting
+refcount conservation and that no page leaks.  Also tier-1
 (tests/test_docs.py).
 """
 from __future__ import annotations
@@ -76,16 +84,27 @@ def _check_import_line(line: str, errors: list, where: str):
 
 
 # Serving-knob drift guard: docs quoting these constructors must only use
-# real dataclass fields (catches knob renames — e.g. ServeConfig.page_size
-# or Request.arrival going away while docs still advertise them).
+# real dataclass fields / signature parameters (catches knob renames —
+# e.g. ServeConfig.page_size or PrefixCache.max_pages going away while
+# docs still advertise them).
 KWARG_GUARDS = {
     "ServeConfig": ("repro.serve", "ServeConfig"),
     "Request": ("repro.serve", "Request"),
+    "PrefixCache": ("repro.serve", "PrefixCache"),
 }
 
 
-def _check_guarded_kwargs(body: str, errors: list, where: str):
+def _guarded_fields(cls) -> set:
+    """Accepted keyword names of a guarded constructor: dataclass fields,
+    or (plain classes like PrefixCache) the __init__ signature."""
     import dataclasses
+    import inspect
+    if dataclasses.is_dataclass(cls):
+        return {f.name for f in dataclasses.fields(cls)}
+    return {p for p in inspect.signature(cls).parameters if p != "self"}
+
+
+def _check_guarded_kwargs(body: str, errors: list, where: str):
     for name, (mod_name, attr) in KWARG_GUARDS.items():
         hits = re.finditer(
             name + r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)", body)
@@ -98,7 +117,7 @@ def _check_guarded_kwargs(body: str, errors: list, where: str):
             continue
         try:
             cls = getattr(importlib.import_module(mod_name), attr)
-            fields = {f.name for f in dataclasses.fields(cls)}
+            fields = _guarded_fields(cls)
         except Exception as e:                              # noqa: BLE001
             errors.append(f"{where}: cannot resolve {mod_name}.{attr}: {e}")
             continue
@@ -192,6 +211,101 @@ def check_docs() -> int:
     return 0
 
 
+# ---- serving scheduler self-check ---------------------------------------------
+
+
+def check_serve() -> int:
+    """Host-side (jax-free) invariants of the serving scheduler stack:
+    refcount conservation in the page pool, radix-tree bookkeeping, and
+    no page leaked after a full submit/admit/grow/decode/free cycle."""
+    for base in ("src",):
+        p = os.path.join(REPO_ROOT, base)
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    import numpy as np
+    from repro.serve.prefix_cache import PrefixCache
+    from repro.serve.scheduler import PagePool, Request, Scheduler
+
+    errors = []
+
+    def conserved(pool, what):
+        if pool.free_pages + pool.pages_in_use != pool.total_pages - 1:
+            errors.append(
+                f"{what}: refcount conservation broken "
+                f"(free {pool.free_pages} + in-use {pool.pages_in_use} "
+                f"!= {pool.total_pages - 1})")
+
+    # pool: alloc/ref/free conservation + hardening
+    pool = PagePool(9)
+    pages = pool.alloc(4)
+    pool.ref(pages[0])
+    pool.free([pages[0]])
+    conserved(pool, "pool after shared free")
+    pool.free(pages)
+    conserved(pool, "pool after full free")
+    for bad, tag in (([pages[0]], "double free"), ([0], "trash"),
+                     ([42], "out of range")):
+        try:
+            pool.free(bad)
+            errors.append(f"pool accepted {tag}")
+        except ValueError:
+            pass
+
+    # radix tree over a fresh pool: insert/match/evict
+    pool = PagePool(9)
+    pc = PrefixCache(pool, page_size=4)
+    toks = np.arange(12)
+    row = pool.alloc(3)
+    pc.insert(toks, row)
+    pool.free(row)                       # cache's refs keep pages alive
+    conserved(pool, "tree after slot free")
+    if pc.match(toks) != row:
+        errors.append("radix tree did not match its own insert")
+    if pc.match(np.arange(1, 13)) != []:
+        errors.append("radix tree matched a different prefix")
+    if pc.evict(3) != 3 or pool.free_pages != pool.total_pages - 1:
+        errors.append("eviction leaked pages")
+
+    # full scheduler cycle: submit/admit/grow/decode/free, warm reuse
+    sched = Scheduler(n_slots=2, max_len=32, page_size=4,
+                      prefix_cache=True)
+    prompt = np.arange(10)
+    for rid in range(3):
+        sched.submit(Request(rid, prompt, max_new=6, arrival=0))
+    placed = sched.admit(0)
+    if [p[3] for p in placed] != [0, 8]:
+        errors.append(f"expected cold then 8-token warm admission, got "
+                      f"{[p[3] for p in placed]}")
+    tick = 0
+    while sched.has_work() and tick < 50:
+        sched.admit(tick)
+        T = sched.tick_steps(4, {s: 1 for s in sched.active_slots()})
+        sched.ensure_capacity(T)
+        for s in list(sched.active_slots()):
+            sched.commit(s, np.full((max(T, 1),), 7), eos_id=-1)
+        sched.count_tick(T)
+        tick += 1
+    if sched.stats["completed"] != 3:
+        errors.append(f"cycle did not complete: {sched.stats}")
+    conserved(sched.pool, "scheduler after cycle")
+    live = sched.pool.pages_in_use - sched.prefix_cache.cached_pages
+    if live != 0:
+        errors.append(f"{live} pages leaked past the prefix cache after "
+                      f"all slots freed")
+    if sched.prefix_cache.evict(sched.prefix_cache.cached_pages) < 1 or \
+            sched.pool.pages_in_use != 0:
+        errors.append("draining the prefix cache left pages in use")
+
+    if errors:
+        for e in errors:
+            print(f"SERVE    {e}")
+        print(f"FATAL: {len(errors)} serving invariant error(s)")
+        return 1
+    print("ok       serving scheduler invariants (pool refcounts, radix "
+          "tree, admit/grow/free cycle)")
+    return 0
+
+
 # ---- dependency report --------------------------------------------------------
 
 
@@ -230,6 +344,8 @@ def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     if "--docs" in argv:
         return check_docs()
+    if "--serve" in argv:
+        return check_serve()
     return check_deps()
 
 

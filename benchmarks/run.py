@@ -271,6 +271,75 @@ def prefix_cache_bench():
     ]
 
 
+def serve_sharded_bench():
+    """Mesh-native serving: packed-weight wire accounting + engine trace.
+
+    Sharded serving moves weights in the SAME wire format it stores them:
+    uint8 nibble codes + f8 block scales (~4.5 bits/param for NVFP4 block
+    16) instead of 16-bit bf16 gathers — the accounting here is exact byte
+    counts over the packed model, checked against the closed-form
+    ``distributed/specs`` numbers.  The engine trace runs on the default
+    1-device mesh, which is the SAME code path TP=N serving takes
+    (benchmarks run without forced host device counts)."""
+    import time
+
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core import fqt
+    from repro.core.quantize import PackedQuantizedTensor
+    from repro.distributed.specs import (packed_gather_ratio,
+                                         packed_wire_bits_per_param)
+    from repro.models import registry
+    from repro.serve import ContinuousEngine, Request, ServeConfig
+    from repro.serve.packing import pack_model_params, weight_wire_bytes
+
+    cfg = get_config("llama2-60m").smoke()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    packed = pack_model_params(cfg, params, fqt.qaf_config().fwd_w)
+    pleaves = [l for l in jax.tree_util.tree_leaves(
+        packed, is_leaf=lambda x: isinstance(x, PackedQuantizedTensor))
+        if isinstance(l, PackedQuantizedTensor)]
+    gemm_params = sum(int(np.prod(l.shape)) for l in pleaves)
+    wire = sum(l.wire_nbytes() for l in pleaves)
+    bf16_wire = 2 * gemm_params
+    rows = [
+        ("serve_sharded", "gemm_params", float(gemm_params)),
+        ("serve_sharded", "wire_bytes_packed", float(wire)),
+        ("serve_sharded", "wire_bytes_bf16", float(bf16_wire)),
+        ("serve_sharded", "wire_bits_per_param", wire * 8 / gemm_params),
+        ("serve_sharded", "wire_bits_per_param_model",
+         packed_wire_bits_per_param()),
+        ("serve_sharded", "gather_ratio_vs_bf16", bf16_wire / wire),
+        ("serve_sharded", "gather_ratio_model", packed_gather_ratio()),
+        ("serve_sharded", "tree_wire_bytes", float(weight_wire_bytes(packed))),
+    ]
+
+    scfg = ServeConfig(batch_size=4, max_len=96, eos_id=-1,
+                       kv_cache_format="nvfp4", page_size=16,
+                       decode_chunk=8, mesh=None)
+    eng = ContinuousEngine(cfg, params, scfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 16))),
+                    max_new=int(rng.integers(6, 16)),
+                    arrival=int(i // 3))
+            for i in range(8)]
+    eng.run(reqs)                                   # warm-up: compiles
+    t0 = time.perf_counter()
+    res = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    ntok = sum(len(o) for o in res.values())
+    rows += [
+        ("serve_sharded", "mesh_devices", float(eng.mesh.devices.size)),
+        ("serve_sharded", "tokens_per_s", ntok / dt),
+        ("serve_sharded", "prefill_compiles", float(eng.prefill_compiles)),
+        ("serve_sharded", "decode_compiles", float(eng.decode_compiles)),
+    ]
+    return rows
+
+
 BENCHES = {
     "fig1": pf.fig1_scale_formats,
     "fig2": pf.fig2_block_sizes,
@@ -284,10 +353,16 @@ BENCHES = {
     "kv_cache": kv_cache_bench,
     "serve_throughput": serve_throughput_bench,
     "prefix_cache": prefix_cache_bench,
+    "serve_sharded": serve_sharded_bench,
 }
 
 QUICK = ("table2", "fig4", "kernels", "fig5", "fig6", "serve_weights",
-         "kv_cache")
+         "kv_cache", "serve_sharded")
+
+# the serving artifact (BENCH_serve.json): throughput, cache bytes/token,
+# prefix-cache hit rate, sharded-weights wire accounting
+SERVE_BENCHES = ("serve_weights", "kv_cache", "serve_throughput",
+                 "prefix_cache", "serve_sharded")
 
 
 def main(argv=None) -> int:
@@ -295,10 +370,18 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true",
                     help="run every paper figure (hours on CPU)")
     ap.add_argument("--bench", default=None, choices=sorted(BENCHES))
+    ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
+                    default=None, metavar="PATH",
+                    help="also run the serving benches and write their rows "
+                         "as JSON (default path: BENCH_serve.json)")
     args = ap.parse_args(argv)
 
     names = ([args.bench] if args.bench
-             else sorted(BENCHES) if args.full else list(QUICK))
+             else sorted(BENCHES) if args.full
+             else list(SERVE_BENCHES) if args.json else list(QUICK))
+    if args.json:
+        names += [n for n in SERVE_BENCHES if n not in names]
+    collected = {}
     print("bench,name,value")
     for name in names:
         t0 = time.time()
@@ -309,7 +392,17 @@ def main(argv=None) -> int:
             continue
         for group, key, val in rows:
             print(f"{group},{key},{val:.6g}")
+            collected.setdefault(group, {})[key] = float(f"{val:.6g}")
         print(f"# {name} took {time.time() - t0:.1f}s", file=sys.stderr)
+    if args.json:
+        import json
+        serve_groups = {g: v for g, v in collected.items()
+                        if g.startswith(("serve", "kv_cache", "prefix"))}
+        with open(args.json, "w") as f:
+            json.dump({"generated_by": "benchmarks.run --json",
+                       "benches": serve_groups}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
     return 0
 
 

@@ -236,6 +236,24 @@ class PackedQuantizedTensor:
                    + self.scales.size * self.scales.dtype.itemsize
                    + self.tscale.size * 4)
 
+    def wire_nbytes(self) -> int:
+        """Bytes an FSDP-style all-gather of this tensor moves: the nibble
+        codes + block scales ARE the wire format (~4.5 bits/param for
+        NVFP4 vs 16 for a bf16 gather); the per-slice tscale is replicated
+        and never travels."""
+        return int(self.packed.size * self.packed.dtype.itemsize
+                   + self.scales.size * self.scales.dtype.itemsize)
+
+    def map_leaves(self, f) -> "PackedQuantizedTensor":
+        """Apply ``f(name, array)`` to the data leaves (packed/scales/
+        tscale), keeping metadata — the hook the sharding layer uses to
+        attach per-leaf partition specs / device placements
+        (distributed/sharding.spec_for_packed)."""
+        return dataclasses.replace(
+            self, packed=f("packed", self.packed),
+            scales=f("scales", self.scales),
+            tscale=f("tscale", self.tscale))
+
     def dequant(self) -> jax.Array:
         """codes * block_scales * tscale, bit-identical to the fake-quant
         (QuantizedTensor) reconstruction of the same tensor."""

@@ -121,3 +121,53 @@ def compression_ratio(spec: BlockQuantSpec, src_bits: int = 16) -> float:
     """Wire bytes ratio vs uncompressed (bf16) gradients."""
     bits = spec.data.nbits + spec.scale.nbits / spec.block
     return src_bits / bits
+
+
+# ---- packed-weight collectives (serving FSDP gather) ---------------------------
+#
+# The gradient wire format above (low-bit codes + block scales) is ALSO the
+# right wire format for gathering FSDP-sharded serving weights: a
+# ``PackedQuantizedTensor`` already stores uint8 nibble codes + f8 block
+# scales, so an all-gather of its leaves moves ~4.5 bits/param (NVFP4:
+# 4 + 8/16) instead of 16 for a bf16 weight gather — the per-slice pow2
+# tensor scale is replicated and never travels.
+
+
+def packed_wire_bits_per_param(block: int = 16) -> float:
+    """Bits/param an all-gather of packed NVFP4 weights moves (~4.5)."""
+    from repro.distributed.specs import packed_wire_bits_per_param as f
+    return f(block)
+
+
+def packed_gather_ratio(block: int = 16, src_bits: int = 16) -> float:
+    """bf16-gather bytes / packed-gather bytes (~3.56x for NVFP4)."""
+    return src_bits / packed_wire_bits_per_param(block)
+
+
+def allgather_packed(pt, axis: str, dim: int = 0):
+    """All-gather a ``PackedQuantizedTensor`` shard along logical ``dim``
+    inside a shard_map manual over ``axis`` — the FSDP-style weight gather
+    of sharded serving.
+
+    Only the wire format travels: the uint8 nibble codes directly, and the
+    block scales bitcast to uint8 for the hop (f8 collectives are not
+    portable across backends; the bytes are identical either way).  ``dim``
+    must not be the nibble-packed last axis (shard FSDP on the contraction
+    axis, as the sharding rules do).
+    """
+    import dataclasses as _dc
+
+    import jax.numpy as _jnp
+    from repro.core.quantize import PackedQuantizedTensor
+    assert isinstance(pt, PackedQuantizedTensor), type(pt)
+    dim = dim % pt.ndim
+    if dim == pt.ndim - 1:
+        raise ValueError("cannot gather along the nibble-packed last axis")
+    packed = jax.lax.all_gather(pt.packed, axis, axis=dim, tiled=True)
+    if _jnp.dtype(pt.scales.dtype).itemsize == 1:
+        sc_u8 = jax.lax.bitcast_convert_type(pt.scales, _jnp.uint8)
+        sc_u8 = jax.lax.all_gather(sc_u8, axis, axis=dim, tiled=True)
+        scales = jax.lax.bitcast_convert_type(sc_u8, pt.scales.dtype)
+    else:                     # non-f8 scale formats: gather as stored
+        scales = jax.lax.all_gather(pt.scales, axis, axis=dim, tiled=True)
+    return _dc.replace(pt, packed=packed, scales=scales)

@@ -25,11 +25,18 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
+import logging
 import re
 from typing import Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.quantize import PackedQuantizedTensor
+from repro.distributed import specs as pspecs
+
+logger = logging.getLogger(__name__)
 
 
 # ---- axis helpers -------------------------------------------------------------
@@ -113,24 +120,32 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def _divisible(spec: P, shape, mesh: Mesh) -> P:
+def _mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _divisible(spec: P, shape, mesh: Mesh, path: str = "",
+               strict: bool = False) -> P:
     """Drop mesh axes that do not divide the corresponding dim (jit allows
     uneven shardings, but padded weight shards waste memory and make the
-    roofline numbers lie — prefer replication for the odd dims)."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    fixed = []
-    for d, ax in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
-        if ax is None:
-            fixed.append(None)
-            continue
-        axes = ax if isinstance(ax, tuple) else (ax,)
-        if any(a not in sizes for a in axes):
-            fixed.append(None)           # axis absent from this mesh
-            continue
-        total = 1
-        for a in axes:
-            total *= sizes[a]
-        fixed.append(ax if shape[d] % total == 0 else None)
+    roofline numbers lie — prefer replication for the odd dims).
+
+    When ``path`` names the leaf (parameter/cache shardings do), every
+    dropped axis is DIAGNOSED — logged, or raised with ``strict=True`` —
+    instead of silently replicating: under nibble packing the trailing
+    axis is halved, and a "sharded" deploy quietly holding full replicas
+    is a correctness-adjacent perf bug.  Anonymous calls (activation
+    constraints, where odd smoke-config dims are routine) stay silent.
+    """
+    drops: list = [] if path else None
+    fixed = pspecs.divisible_axes(tuple(spec), tuple(shape),
+                                  _mesh_axis_sizes(mesh), path=path,
+                                  drops=drops)
+    if drops:
+        if strict:
+            raise ValueError("; ".join(drops))
+        for d in drops:
+            logger.warning("sharding: %s", d)
     return P(*fixed)
 
 
@@ -139,7 +154,8 @@ def params_shardings(params, mesh: Mesh):
 
     def one(path, x):
         spec = param_spec(_path_str(path), x.ndim, mesh)
-        return NamedSharding(mesh, _divisible(spec, x.shape, mesh))
+        return NamedSharding(mesh, _divisible(spec, x.shape, mesh,
+                                              path=_path_str(path)))
 
     return jax.tree_util.tree_map_with_path(one, params)
 
@@ -147,7 +163,7 @@ def params_shardings(params, mesh: Mesh):
 def params_specs(params, mesh: Mesh):
     def one(path, x):
         return _divisible(param_spec(_path_str(path), x.ndim, mesh),
-                          x.shape, mesh)
+                          x.shape, mesh, path=_path_str(path))
 
     return jax.tree_util.tree_map_with_path(one, params)
 
@@ -269,6 +285,147 @@ def constrain(x, kind: str):
     mesh, mode = ctx
     spec = _constrain_spec(kind, x.shape, mesh, mode)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---- mesh-native serving -------------------------------------------------------
+#
+# The serving stack places everything under ONE explicit Mesh; a 1-device
+# mesh is the degenerate case of the same code path (device_put with a
+# replicated spec on one device is the identity), so the engines carry no
+# ``if sharded:`` forks.  Axes: "model" is the serving TP axis (heads /
+# hidden / vocab), optional "data" is an FSDP-style axis over which packed
+# weights are gathered at ~4.5 bits/param (distributed/compression.py).
+
+
+def make_serve_mesh(spec: Optional[str] = None, *, devices=None) -> Mesh:
+    """Build the serving mesh from a ``--mesh`` CLI spec ("tp=2", ...).
+
+    ``None``/empty means the degenerate 1-device mesh over the default
+    device — the unsharded engine IS this mesh's special case.
+    """
+    sizes = pspecs.parse_mesh_spec(spec)
+    axes = tuple(a for a in ("data", "model") if a in sizes)
+    shape = tuple(sizes[a] for a in axes)
+    need = int(np.prod(shape))
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if need > len(devices):
+        raise ValueError(
+            f"mesh spec {spec!r} needs {need} devices, have "
+            f"{len(devices)}; on CPU force host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"(set BEFORE jax initializes)")
+    return Mesh(np.array(devices[:need]).reshape(shape), axes)
+
+
+def spec_for_packed(path: str, leaf: PackedQuantizedTensor,
+                    mesh: Mesh) -> dict:
+    """Partition specs for the three leaves of one packed weight.
+
+    The code (``packed``) spec comes from the SAME rule table that shards
+    the unpacked bf16 weight, re-validated against the nibble-halved and
+    scale-blocked leaf shapes; the ``scales``/``tscale`` specs are DERIVED
+    from the code spec (distributed/specs.packed_leaf_specs), so block-
+    scale axes always shard congruently with code axes — they cannot
+    diverge.  Returns ``{"packed": P, "scales": P, "tscale": P}``.
+    """
+    base = param_spec(path, leaf.ndim, mesh)
+    drops: list = []
+    out = pspecs.packed_leaf_specs(tuple(base), tuple(leaf.shape), leaf.axis,
+                                   leaf.block, _mesh_axis_sizes(mesh),
+                                   path=path, drops=drops)
+    for d in drops:
+        logger.warning("sharding: %s", d)
+    return {k: P(*v) for k, v in out.items()}
+
+
+def place_serve_params(params, mesh: Mesh):
+    """device_put a (possibly packed) parameter pytree under ``mesh``.
+
+    Packed leaves get ``spec_for_packed`` shardings on their nibble-code /
+    block-scale / tensor-scale arrays; plain leaves follow ``param_spec``.
+    On a 1-device mesh this is the identity placement.
+    """
+
+    def one(path, leaf):
+        p = _path_str(path)
+        if isinstance(leaf, PackedQuantizedTensor):
+            sh = spec_for_packed(p, leaf, mesh)
+            return leaf.map_leaves(
+                lambda name, x: jax.device_put(
+                    x, NamedSharding(mesh, sh[name])))
+        if not hasattr(leaf, "ndim"):
+            return leaf
+        spec = _divisible(param_spec(p, leaf.ndim, mesh), leaf.shape, mesh,
+                          path=p)
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(
+        one, params, is_leaf=lambda x: isinstance(x, PackedQuantizedTensor))
+
+
+def serve_cache_shardings(cache_struct, mesh: Mesh):
+    """Shardings for serving decode state under the serving mesh.
+
+    ``PagedKVCache`` physical page pools (``(…, P, page, KVH, Dc)`` codes
+    and scales) shard their KV-heads axis over the TP axis ("model") —
+    each device holds the KV pages of its own heads, exactly the heads it
+    attends with under Megatron TP.  Page-table rows and lengths are tiny
+    int32 host-managed state and stay replicated (the host mutates them
+    identically everywhere).  All other cache leaves are replicated.
+    """
+    tp = tp_axis(mesh)
+    from repro.models.layers import PagedKVCache
+
+    def pool_spec(x, path):
+        spec = [None] * x.ndim
+        if tp is not None and x.ndim >= 2:
+            spec[PagedKVCache.HEADS_AXIS] = tp
+            return _divisible(P(*spec), x.shape, mesh, path=path)
+        return P(*spec)
+
+    def one(path, leaf):
+        p = _path_str(path)
+        if isinstance(leaf, PagedKVCache):
+            import dataclasses as _dc
+            return _dc.replace(
+                leaf,
+                k_codes=NamedSharding(mesh, pool_spec(leaf.k_codes,
+                                                      p + "/k_codes")),
+                k_scales=NamedSharding(mesh, pool_spec(leaf.k_scales,
+                                                       p + "/k_scales")),
+                v_codes=NamedSharding(mesh, pool_spec(leaf.v_codes,
+                                                      p + "/v_codes")),
+                v_scales=NamedSharding(mesh, pool_spec(leaf.v_scales,
+                                                       p + "/v_scales")),
+                page_table=NamedSharding(mesh, P()),
+                lengths=NamedSharding(mesh, P()))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(
+        one, cache_struct, is_leaf=lambda x: isinstance(x, PagedKVCache))
+
+
+def place_serve_cache(cache, mesh: Mesh):
+    """device_put serving decode state under ``mesh`` (identity on 1 dev)."""
+    shards = serve_cache_shardings(cache, mesh)
+    leaves, treedef = jax.tree_util.tree_flatten(cache)
+    shard_leaves = jax.tree_util.tree_leaves(shards)
+    placed = [jax.device_put(x, s) for x, s in zip(leaves, shard_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, placed)
+
+
+def constrain_serve_cache(cache, mesh: Mesh):
+    """In-jit counterpart of ``place_serve_cache``: annotate the carry a
+    compiled serving program RETURNS with the same shardings its inputs
+    were placed under, so every subsequent call sees identical input
+    shardings (the engines' no-recompile guarantee holds on any mesh).
+    Pure layout annotation — leaf values are untouched."""
+    shards = serve_cache_shardings(cache, mesh)
+    leaves, treedef = jax.tree_util.tree_flatten(cache)
+    shard_leaves = jax.tree_util.tree_leaves(shards)
+    out = [jax.lax.with_sharding_constraint(x, s)
+           for x, s in zip(leaves, shard_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 # ---- KV cache / decode state ---------------------------------------------------

@@ -322,3 +322,91 @@ def packed_block_matmul(a: jax.Array, b_packed: jax.Array,
         interpret=interpret,
     )(a, b_packed, b_scales, a_rbits, tsa, tsb)
     return out.astype(out_dtype)
+
+
+# ---- tensor-parallel form (mesh-native serving) -------------------------------
+#
+# The explicit Megatron decomposition of the packed FQT matmul, written as a
+# shard_map over the serving mesh (distributed/compat.py shim, so it runs on
+# the full supported JAX range and on CPU host-platform device counts):
+#
+#   column-parallel: W sharded on N (output features) — each device runs a
+#     local packed GEMM on its own nibble-code / block-scale shard; NO
+#     collective (the output stays sharded on N, which is exactly what the
+#     next row-parallel GEMM wants).
+#   row-parallel: X and W sharded on K (contraction) — local packed GEMM,
+#     then a SINGLE psum of the partial products.
+#
+# With an FSDP-style ``gather_axis``, the weight is additionally sharded
+# along K over that axis and the body first all-gathers the PACKED wire
+# format (uint8 nibbles + f8 scales, ~4.5 bits/param — see
+# distributed/compression.allgather_packed) instead of gathered bf16.
+#
+# This is the collective form the GSPMD engine path lowers to when packed
+# leaves carry ``spec_for_packed`` partition specs; it exists explicitly so
+# the decomposition is testable device-count-by-device-count (and is the
+# shape a future Pallas ring-collective kernel would fuse into).
+
+
+def tp_fp4_matmul(x, w, *, cfg, mesh, seed=None, parallel: str = "column",
+                  axis: str = "model", gather_axis: Optional[str] = None):
+    """Tensor-parallel packed FQT matmul: (..., K) @ packed (K, N) -> (..., N).
+
+    ``w`` is a ``PackedQuantizedTensor`` (blocking axis -2).  The activation
+    is quantized ONCE with global (single-device) semantics — ``cfg.fwd_a``
+    amax over the full K — so column-parallel output is bit-identical to
+    the 1-device packed forward; row-parallel differs only by psum
+    reduction order.  Returns the full (global) product on every device
+    per the out_specs (column: sharded on N; row: replicated).
+    """
+    import dataclasses
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import fqt
+    from repro.core.quantize import PackedQuantizedTensor
+    from repro.distributed.compat import shard_map
+
+    if not isinstance(w, PackedQuantizedTensor) or w.ndim != 2:
+        raise ValueError("tp_fp4_matmul needs a 2D PackedQuantizedTensor")
+    if parallel not in ("column", "row"):
+        raise ValueError(f"parallel={parallel!r}")
+    K, N = w.shape
+    if x.shape[-1] != K:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if seed is None:
+        seed = jnp.zeros((), jnp.uint32)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, K)
+
+    # activation quantization OUTSIDE the shard_map: global amax semantics
+    fwd_a = fqt._if_divisible(cfg.fwd_a, K)
+    qx = fqt._maybe_q(x2, fwd_a, axis=-1,
+                      seed=jnp.asarray(seed, jnp.uint32), site=0)
+
+    tp = axis
+    k_axes = ((tp,) if parallel == "row" else ()) + \
+        ((gather_axis,) if gather_axis else ())
+    k_spec = None if not k_axes else \
+        k_axes[0] if len(k_axes) == 1 else k_axes
+    n_spec = tp if parallel == "column" else None
+    # scale spec DERIVED from the code spec (same K/N axes) — the
+    # congruence rule of distributed/sharding.spec_for_packed
+    w_specs = dataclasses.replace(
+        w, packed=P(k_spec, n_spec), scales=P(k_spec, n_spec), tscale=P())
+    x_spec = P(None, tp if parallel == "row" else None)
+    out_spec = P(None, tp) if parallel == "column" else P(None, None)
+
+    def body(qx_l, w_l):
+        if gather_axis:
+            from repro.distributed.compression import allgather_packed
+            w_l = allgather_packed(w_l, gather_axis, dim=0)
+        y = jnp.matmul(qx_l, w_l.dequant(),
+                       preferred_element_type=jnp.float32)
+        if parallel == "row":
+            y = jax.lax.psum(y, tp)
+        return y.astype(x.dtype)
+
+    y = shard_map(body, mesh=mesh, in_specs=(x_spec, w_specs),
+                  out_specs=out_spec)(qx, w)
+    return y.reshape(lead + (N,))

@@ -25,5 +25,13 @@ def make_host_mesh():
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def make_serve_mesh(spec=None):
+    """Serving mesh from a ``--mesh`` CLI spec ("tp=2", "dp=2,tp=4", None
+    = 1-device).  Thin re-export of ``distributed.sharding.make_serve_mesh``
+    so launchers take meshes from one module."""
+    from repro.distributed.sharding import make_serve_mesh as f
+    return f(spec)
+
+
 def describe(mesh) -> str:
     return f"mesh{dict(zip(mesh.axis_names, mesh.devices.shape))}"

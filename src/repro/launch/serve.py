@@ -67,6 +67,15 @@ def main(argv=None):
                     help="with --queue: give every synthetic request the "
                          "same N-token system prompt (exercises the "
                          "prefix cache)")
+    ap.add_argument("--mesh", default=None,
+                    help="serving mesh spec, e.g. 'tp=2' or 'dp=2,tp=4': "
+                         "packed weights and KV page pools are sharded "
+                         "under an explicit device mesh (tp -> 'model' "
+                         "shards heads/hidden/vocab, dp/fsdp -> 'data'); "
+                         "default is the degenerate 1-device mesh — the "
+                         "SAME code path, not a fork.  On CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N first")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
 
@@ -86,7 +95,18 @@ def main(argv=None):
                        kv_cache_format=kv_fmt,
                        page_size=args.page_size, max_slots=args.max_slots,
                        prefix_cache=args.prefix_cache,
-                       prefix_cache_pages=args.prefix_cache_pages)
+                       prefix_cache_pages=args.prefix_cache_pages,
+                       mesh=args.mesh)
+    if args.mesh:
+        from repro.distributed import sharding as shd
+        from repro.distributed.specs import (packed_gather_ratio,
+                                             packed_wire_bits_per_param)
+        mesh = shd.make_serve_mesh(args.mesh)   # fail fast on device count
+        print(f"serving mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}"
+              f" over {mesh.devices.size} of {jax.device_count()} devices; "
+              f"packed weight collectives move "
+              f"{packed_wire_bits_per_param():.2f} bits/param "
+              f"({packed_gather_ratio():.2f}x less than bf16)")
     qcfg = fqt.bf16_config() if args.bf16 else None
     rng = np.random.default_rng(0)
 

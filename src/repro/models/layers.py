@@ -465,6 +465,12 @@ class PagedKVCache:
     block: int = 16
     page_size: int = 16
 
+    # KV-heads axis of every pool leaf (codes AND scales), also after
+    # vmap stacks a leading layer dim — the axis tensor-parallel serving
+    # shards over "model" (distributed/sharding.serve_cache_shardings):
+    # each device holds the pages of exactly the heads it attends with.
+    HEADS_AXIS = -2
+
     @property
     def n_slots(self) -> int:
         return self.page_table.shape[0]

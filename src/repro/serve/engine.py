@@ -47,7 +47,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
 from repro.core import fqt
+from repro.distributed import sharding as shd
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.models.layers import TRASH_PAGE, PagedKVCache
@@ -85,6 +88,14 @@ class ServeConfig:
     # linear (non-SWA) caches only.
     prefix_cache: bool = False
     prefix_cache_pages: Optional[int] = None   # cap on cached pages (LRU)
+    # ---- mesh-native serving --------------------------------------------
+    # "--mesh" spec ("tp=2", "dp=2,tp=4", ...) for the explicit serving
+    # Mesh BOTH engines place their weights and KV pools under.  None means
+    # the degenerate 1-device mesh — the SAME code path (placement under a
+    # 1-device mesh is the identity), never an ``if sharded:`` fork.  TP
+    # shards heads/hidden/vocab on "model" (Megatron column/row-parallel
+    # packed GEMMs via GSPMD); KV page pools shard their KV-heads axis.
+    mesh: Optional[str] = None
 
 
 def _sample(logits: jax.Array, key, scfg: ServeConfig) -> jax.Array:
@@ -112,25 +123,42 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
                  qcfg: Optional[fqt.QuantConfig] = None,
-                 pack_weights: bool = True):
+                 pack_weights: bool = True,
+                 mesh: Optional[Mesh] = None):
         self.cfg, self.scfg = cfg, scfg
         # serving default: the paper's FP4 forward (RtN), nothing else
         self.qcfg = qcfg if qcfg is not None else fqt.qaf_config()
-        if pack_weights and self.qcfg.fwd_w is not None:
-            # quantize ONCE: every GEMM weight becomes packed NVFP4 storage;
-            # the forward consumes it directly (fqt._packed_forward), token-
-            # identical to re-fake-quantizing per GEMM.
-            params = packing.pack_model_params(cfg, params, self.qcfg.fwd_w)
-        self.params = params
+        # ONE mesh-native path: scfg.mesh == None resolves to the 1-device
+        # mesh, whose placement is the identity — no ``if sharded:`` fork.
+        self.mesh = mesh if mesh is not None \
+            else shd.make_serve_mesh(scfg.mesh)
+        self._rep = NamedSharding(self.mesh, P())
+        # quantize ONCE: every GEMM weight becomes packed NVFP4 storage;
+        # the forward consumes it directly (fqt._packed_forward), token-
+        # identical to re-fake-quantizing per GEMM.  Packed or not, the
+        # tree is placed under the serving mesh (congruent code/scale
+        # specs for packed leaves, rank+name rules otherwise).
+        spec = self.qcfg.fwd_w \
+            if (pack_weights and self.qcfg.fwd_w is not None) else None
+        self.params = packing.pack_model_params(cfg, params, spec,
+                                                mesh=self.mesh)
 
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(2,))
 
+    def _replicate(self, *xs):
+        """Pin small host-facing arrays (tokens/masks/keys) replicated on
+        the serving mesh, so every jit call sees the SAME input shardings
+        (no-recompile guarantee) and GSPMD never scatters token vectors."""
+        out = tuple(jax.device_put(x, self._rep) for x in xs)
+        return out if len(out) > 1 else out[0]
+
     # ---- compiled kernels --------------------------------------------------
 
     def _prefill_impl(self, tokens, carry, extras):
-        return registry.prefill(self.params, self.cfg, self.qcfg, tokens,
-                                carry, extras=extras)
+        logits, carry = registry.prefill(self.params, self.cfg, self.qcfg,
+                                         tokens, carry, extras=extras)
+        return logits, shd.constrain_serve_cache(carry, self.mesh)
 
     def _decode_impl(self, tokens, done, carry, key):
         """One lockstep decode step with ON-DEVICE done/EOS bookkeeping:
@@ -145,7 +173,15 @@ class Engine:
                                              self.qcfg, emit[:, None],
                                              carry)
         nxt = _sample(logits[:, -1], sub, self.scfg)
-        return emit, done, nxt, carry, key
+        # pin the small host-facing outputs replicated: the NEXT call's
+        # input shardings equal this call's (one compile per program, on
+        # any mesh); purely a layout annotation after sampling — the
+        # GEMM/attention numerics upstream are untouched.
+        emit, done, nxt, key = (
+            jax.lax.with_sharding_constraint(x, self._rep)
+            for x in (emit, done, nxt, key))
+        return emit, done, nxt, shd.constrain_serve_cache(carry,
+                                                          self.mesh), key
 
     # ---- public API ----------------------------------------------------------
 
@@ -166,6 +202,8 @@ class Engine:
         carry = registry.make_decode_state(
             cfg, scfg.batch_size, scfg.max_len,
             kv_cache_format=scfg.kv_cache_format)
+        carry = shd.place_serve_cache(carry, self.mesh)
+        toks = self._replicate(toks)
         extras = extras or {}
         last_logits, carry = self._prefill(toks, carry, extras)
 
@@ -173,7 +211,8 @@ class Engine:
         # uses a child, never the parent of the per-step chain.
         key, sub = jax.random.split(jax.random.PRNGKey(scfg.seed))
         nxt = _sample(last_logits, sub, scfg)
-        done = jnp.zeros((scfg.batch_size,), bool)
+        key, nxt = self._replicate(key, nxt)
+        done = self._replicate(jnp.zeros((scfg.batch_size,), bool))
         emitted = []                      # device arrays; no per-step sync
         sync = max(1, scfg.decode_chunk)
         for t in range(max_new):
@@ -207,16 +246,22 @@ class ContinuousEngine:
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
                  qcfg: Optional[fqt.QuantConfig] = None,
-                 pack_weights: bool = True):
+                 pack_weights: bool = True,
+                 mesh: Optional[Mesh] = None):
         if cfg.family not in ("dense", "moe", "encdec"):
             raise NotImplementedError(
                 f"continuous batching serves dense/moe/encdec families; "
                 f"{cfg.family!r} stays on the lockstep Engine")
         self.cfg, self.scfg = cfg, scfg
         self.qcfg = qcfg if qcfg is not None else fqt.qaf_config()
-        if pack_weights and self.qcfg.fwd_w is not None:
-            params = packing.pack_model_params(cfg, params, self.qcfg.fwd_w)
-        self.params = params
+        # same mesh-native path as the lockstep Engine (1-device default)
+        self.mesh = mesh if mesh is not None \
+            else shd.make_serve_mesh(scfg.mesh)
+        self._rep = NamedSharding(self.mesh, P())
+        spec = self.qcfg.fwd_w \
+            if (pack_weights and self.qcfg.fwd_w is not None) else None
+        self.params = packing.pack_model_params(cfg, params, spec,
+                                                mesh=self.mesh)
 
         self.n_slots = scfg.max_slots or scfg.batch_size
         psz = scfg.page_size
@@ -236,6 +281,21 @@ class ContinuousEngine:
                                     donate_argnums=(5,))
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
 
+    def _replicate(self, *xs):
+        """See ``Engine._replicate`` — stable input shardings under the
+        mesh for the host-facing token/step vectors."""
+        out = tuple(jax.device_put(x, self._rep) for x in xs)
+        return out if len(out) > 1 else out[0]
+
+    def _pin(self, *xs):
+        """In-jit counterpart of ``_replicate``: annotate already-computed
+        outputs replicated so the next call's input shardings match this
+        call's (the three-program / no-recompile guarantee holds on any
+        mesh).  Applied after sampling — upstream numerics untouched."""
+        out = tuple(jax.lax.with_sharding_constraint(x, self._rep)
+                    for x in xs)
+        return out if len(out) > 1 else out[0]
+
     # ---- the two compiled programs ----------------------------------------
 
     def _request_key(self, rid, step):
@@ -251,7 +311,8 @@ class ContinuousEngine:
             self.params, self.cfg, self.qcfg, tokens, carry, slot, plen,
             extras=extras)
         tok = _sample(logits, self._request_key(rid, 0), self.scfg)[0]
-        return tok, _greedy_margin(logits)[0], carry
+        tok, margin = self._pin(tok, _greedy_margin(logits)[0])
+        return tok, margin, shd.constrain_serve_cache(carry, self.mesh)
 
     def _prefill_suffix_impl(self, tokens, plen, pfx, slot, rid, carry):
         """Warm-prefix prefill: the slot's page row already shares the
@@ -262,7 +323,8 @@ class ContinuousEngine:
             self.params, self.cfg, self.qcfg, tokens, carry, slot, plen,
             pfx)
         tok = _sample(logits, self._request_key(rid, 0), self.scfg)[0]
-        return tok, _greedy_margin(logits)[0], carry
+        tok, margin = self._pin(tok, _greedy_margin(logits)[0])
+        return tok, margin, shd.constrain_serve_cache(carry, self.mesh)
 
     def _decode_impl(self, tokens, carry, rids, steps):
         """One token for every slot; per-slot kv_len/q_offset ride inside
@@ -277,7 +339,9 @@ class ContinuousEngine:
             keys = jax.vmap(self._request_key)(rids, steps)
             nxt = jax.vmap(
                 lambda l, k: _sample(l[None], k, self.scfg)[0])(lg, keys)
-        return nxt, _greedy_margin(lg), steps + 1, carry
+        nxt, margin, steps = self._pin(nxt, _greedy_margin(lg), steps + 1)
+        return nxt, margin, steps, shd.constrain_serve_cache(carry,
+                                                             self.mesh)
 
     # ---- jit-cache introspection (no-recompile guarantees) -----------------
 
@@ -354,9 +418,14 @@ class ContinuousEngine:
             self.cfg, self.n_slots, scfg.max_len,
             kv_cache_format=scfg.kv_cache_format,
             page_size=scfg.page_size, total_pages=sched.total_pages)
-        tokens = jnp.zeros((self.n_slots,), jnp.int32)
-        rids = jnp.zeros((self.n_slots,), jnp.int32)
-        steps = jnp.ones((self.n_slots,), jnp.int32)
+        # KV page pools shard their heads axis over the TP axis; page-table
+        # rows / lengths stay replicated (host mutates them identically
+        # everywhere).  Identity on the default 1-device mesh.
+        carry = shd.place_serve_cache(carry, self.mesh)
+        tokens, rids, steps = self._replicate(
+            jnp.zeros((self.n_slots,), jnp.int32),
+            jnp.zeros((self.n_slots,), jnp.int32),
+            jnp.ones((self.n_slots,), jnp.int32))
         self.margins: Dict[int, list] = {}
         trash_row = np.full((self.n_pages_slot,), TRASH_PAGE, np.int32)
         slot_rid = [None] * self.n_slots

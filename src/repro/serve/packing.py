@@ -74,24 +74,38 @@ def _is_float_leaf(leaf) -> bool:
 
 
 def pack_model_params(cfg: ModelConfig, params: Any,
-                      spec: Optional[BlockQuantSpec]) -> Any:
+                      spec: Optional[BlockQuantSpec],
+                      mesh: Optional[Any] = None) -> Any:
     """Pack every GEMM weight of ``params`` with ``spec`` (fwd_w).
 
     Stacked layer/expert weights keep their leading axes as batch dims
     (per-slice tensor scales), so scan/vmap layer application sees exactly
     the per-matrix quantization of the fake-quant forward.  Returns a new
-    pytree; with ``spec=None`` the tree is returned unchanged.
+    pytree; with ``spec=None`` the tree is returned unchanged (no packing).
+
+    With ``mesh`` (a ``jax.sharding.Mesh``) the result is additionally
+    placed under that mesh: every packed leaf's nibble-code / block-scale /
+    tensor-scale arrays get the congruent partition specs of
+    ``distributed/sharding.spec_for_packed`` (scale specs derived from code
+    specs, so they can never diverge), and unpacked leaves follow the
+    standard parameter rules.  A 1-device mesh is an identity placement —
+    the unsharded engine is the degenerate case of the same path.
     """
-    if spec is None:
-        return params
+    packed = params
+    if spec is not None:
+        def pack(path, leaf):
+            name = _leaf_name(path)
+            if not _packable(name, leaf, spec, cfg.quantize_lm_head):
+                return leaf
+            return pack_quantize(leaf, spec, axis=-2,
+                                 batch_dims=leaf.ndim - 2)
 
-    def pack(path, leaf):
-        name = _leaf_name(path)
-        if not _packable(name, leaf, spec, cfg.quantize_lm_head):
-            return leaf
-        return pack_quantize(leaf, spec, axis=-2, batch_dims=leaf.ndim - 2)
+        packed = jax.tree_util.tree_map_with_path(pack, params)
 
-    return jax.tree_util.tree_map_with_path(pack, params)
+    if mesh is not None:
+        from repro.distributed.sharding import place_serve_params
+        packed = place_serve_params(packed, mesh)
+    return packed
 
 
 def weight_store_bytes(params: Any) -> int:
@@ -102,6 +116,22 @@ def weight_store_bytes(params: Any) -> int:
             params, is_leaf=lambda x: isinstance(x, PackedQuantizedTensor)):
         if isinstance(leaf, PackedQuantizedTensor):
             total += leaf.nbytes()
+        elif hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+    return total
+
+
+def weight_wire_bytes(params: Any) -> int:
+    """Bytes a full FSDP-style weight all-gather moves under the serving
+    mesh: packed leaves travel as their wire format (uint8 nibble codes +
+    f8 block scales, ~4.5 bits/param — ``PackedQuantizedTensor.
+    wire_nbytes``; the replicated tscale never travels), unpacked leaves
+    as stored."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, PackedQuantizedTensor)):
+        if isinstance(leaf, PackedQuantizedTensor):
+            total += leaf.wire_nbytes()
         elif hasattr(leaf, "nbytes"):
             total += int(leaf.nbytes)
     return total

@@ -1,0 +1,47 @@
+"""Shared fixtures: the multi-device subprocess runner.
+
+jax pins the device count at first backend use, so multi-device tests
+(forced host CPU devices) cannot run in the main pytest process — it keeps
+its single real device.  ``run_multidev`` runs a snippet in a SUBPROCESS
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set both in
+the environment and (belt-and-braces) at the top of the generated script,
+before jax can initialize.  Heavy TP sweeps built on it are marked
+``slow`` (pytest.ini) so tier-1 stays fast.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))), "src")
+MULTIDEV_DEVICES = 4
+
+
+@pytest.fixture
+def run_multidev(tmp_path):
+    """Run a python snippet under forced host devices; asserts exit 0.
+
+    The XLA flag is injected BEFORE the snippet so a script can never
+    import jax first by accident; PYTHONPATH points at ``src``.  Returns
+    the CompletedProcess (stdout carries the snippet's own markers).
+    """
+
+    def run(body: str, devices: int = MULTIDEV_DEVICES, timeout: int = 900):
+        flag = f"--xla_force_host_platform_device_count={devices}"
+        script = tmp_path / "multidev.py"
+        script.write_text(
+            f'import os\nos.environ["XLA_FLAGS"] = "{flag}"\n'
+            + textwrap.dedent(body))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = _SRC
+        env["XLA_FLAGS"] = flag
+        r = subprocess.run([sys.executable, str(script)],
+                           capture_output=True, text=True, timeout=timeout,
+                           env=env)
+        assert r.returncode == 0, r.stdout + r.stderr
+        return r
+
+    return run

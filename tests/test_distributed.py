@@ -49,8 +49,11 @@ def test_divisible_drops_odd_axes():
     # 40 heads * 128 hd = 5120 divisible; but a dim of 10 is not
     assert shd._divisible(P("data", "model"), (10, 5120), mesh) == \
         P(None, "model")
+    # fully-dropped specs come back in CANONICAL form (trailing Nones
+    # stripped): P() == P(None, None) to GSPMD but not to the jit compile
+    # cache's sharding equality, which is why _divisible normalizes
     assert shd._divisible(P(("pod", "data"), None), (10, 64),
-                          _FakeMesh()) == P(None, None)
+                          _FakeMesh()) == P()
 
 
 def test_constrain_noop_without_scope():

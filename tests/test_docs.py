@@ -40,11 +40,37 @@ def test_check_env_deps_mode_still_works(capsys):
     assert "python" in capsys.readouterr().out
 
 
+def test_check_env_mesh_mode(capsys):
+    """--mesh: jax-free spec-layer self-check (CLI grammar, code/scale
+    congruence, drop diagnostics, 4.5 bits/param wire accounting)."""
+    assert check_env.main(["--mesh"]) == 0, capsys.readouterr().out
+    assert "mesh partition specs" in capsys.readouterr().out
+
+
 def test_check_env_serve_mode(capsys):
     """--serve: host-side scheduler invariants (refcount conservation,
     radix-tree bookkeeping, no page leaked after a full cycle)."""
     assert check_env.main(["--serve"]) == 0, capsys.readouterr().out
     assert "serving scheduler invariants" in capsys.readouterr().out
+
+
+def test_docs_guard_validates_mesh_specs():
+    """Quoted ``--mesh`` values must parse with the real CLI grammar, and
+    string-literal kwarg VALUES (mesh="tp=2") must not read as kwargs."""
+    errs = []
+    check_env._check_command("python -m repro.launch.serve --smoke "
+                             "--mesh tp=2", errs, "t")
+    assert errs == [], errs
+    check_env._check_command("python -m repro.launch.serve --smoke "
+                             "--mesh ep=3", errs, "t")
+    assert len(errs) == 1 and "--mesh" in errs[0]
+    errs = []
+    check_env._check_guarded_kwargs(
+        'sc = ServeConfig(mesh="tp=2", page_size=16)', errs, "t")
+    assert errs == [], errs
+    check_env._check_guarded_kwargs(
+        'sc = ServeConfig(mesh="tp=2", no_such_knob=1)', errs, "t")
+    assert len(errs) == 1 and "no_such_knob" in errs[0]
 
 
 def test_docs_guard_checks_prefix_cache_kwargs():

@@ -3,6 +3,7 @@
   PYTHONPATH=src python tools/check_env.py          # dependency report
   PYTHONPATH=src python tools/check_env.py --docs   # docs snippet check
   PYTHONPATH=src python tools/check_env.py --serve  # scheduler invariants
+  PYTHONPATH=src python tools/check_env.py --mesh   # partition-spec check
 
 Default mode prints one line per dependency so a red test run can be
 triaged at a glance instead of letting pytest collection explode on an
@@ -22,6 +23,12 @@ fields/parameters.  Wired into tier-1 as a fast test (tests/test_docs.py).
 machinery: it builds a tiny refcounted page pool + prefix-cache radix
 tree and drives a full submit/admit/grow/decode/free cycle, asserting
 refcount conservation and that no page leaks.  Also tier-1
+(tests/test_docs.py).
+
+``--mesh`` is a jax-free self-check of the sharded-serving partition-spec
+layer (repro.distributed.specs): ``--mesh tp=N`` CLI grammar, the
+code/scale congruence invariant of packed leaves, drop diagnostics for
+odd dims, and the 4.5 bits/param packed wire accounting.  Also tier-1
 (tests/test_docs.py).
 """
 from __future__ import annotations
@@ -108,9 +115,12 @@ def _check_guarded_kwargs(body: str, errors: list, where: str):
     for name, (mod_name, attr) in KWARG_GUARDS.items():
         hits = re.finditer(
             name + r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)", body)
-        # strip nested call arguments so e.g. np.array(x, dtype=...) inside
-        # a constructor doesn't contribute its own kwargs
-        args = [re.sub(r"\([^()]*\)", "", m.group(1)) for m in hits]
+        # strip string literals (a mesh="tp=2" value must not read as a
+        # tp= kwarg) and nested call arguments (np.array(x, dtype=...))
+        # so neither contributes phantom kwargs
+        args = [re.sub(r"\([^()]*\)", "",
+                       re.sub(r"'[^']*'|\"[^\"]*\"", "''", m.group(1)))
+                for m in hits]
         kwargs = {kw for a in args
                   for kw in re.findall(r"(?<![\w.])(\w+)\s*=", a)}
         if not kwargs:
@@ -170,6 +180,18 @@ def _check_command(cmd: str, errors: list, where: str):
             if bench not in BENCHES:
                 errors.append(f"{where}: unknown bench {bench!r} "
                               f"(have {sorted(BENCHES)})")
+        finally:
+            sys.path.pop(0)
+    if "--mesh" in toks and toks.index("--mesh") + 1 < len(toks):
+        # quoted mesh specs must parse (jax-free: repro.distributed.specs)
+        spec = toks[toks.index("--mesh") + 1].strip("'\"")
+        sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+        try:
+            from repro.distributed.specs import parse_mesh_spec
+            try:
+                parse_mesh_spec(spec)
+            except ValueError as e:
+                errors.append(f"{where}: bad --mesh spec {spec!r}: {e}")
         finally:
             sys.path.pop(0)
 
@@ -306,6 +328,99 @@ def check_serve() -> int:
     return 0
 
 
+# ---- mesh spec self-check -----------------------------------------------------
+
+
+def check_mesh() -> int:
+    """Jax-free self-check of the packed-serving partition-spec layer
+    (repro.distributed.specs): the mesh-spec CLI grammar, and the
+    code/scale CONGRUENCE invariant — a mesh axis shards logical dim d of
+    the block scales iff it shards dim d of the nibble codes, for every
+    weight kind x shape x TP size, with odd dims diagnosed (never silently
+    replicated) and the wire-format accounting at its closed form."""
+    for base in ("src",):
+        p = os.path.join(REPO_ROOT, base)
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    from repro.distributed import specs
+
+    errors = []
+
+    # CLI grammar
+    for spec, want in (
+            (None, {"model": 1}), ("", {"model": 1}),
+            ("tp=2", {"model": 2}), ("tp=4", {"model": 4}),
+            ("dp=2,tp=4", {"data": 2, "model": 4}),
+            ("fsdp=2", {"data": 2, "model": 1})):
+        got = specs.parse_mesh_spec(spec)
+        if got != want:
+            errors.append(f"parse_mesh_spec({spec!r}) = {got}, want {want}")
+    for bad in ("tp=0", "tp=-1", "ep=2", "tp", "tp=2;dp=2"):
+        try:
+            specs.parse_mesh_spec(bad)
+            errors.append(f"parse_mesh_spec accepted {bad!r}")
+        except ValueError:
+            pass
+
+    # congruence sweep: every kind x shape x tp size keeps scale specs
+    # derived from (== congruent with) code specs
+    kinds = {                       # logical base specs, Megatron rules
+        "io": (None, "model"), "oi": ("model", None),
+        "d_vocab": (None, "model"), "stacked_io": (None, None, "model"),
+    }
+    shapes = ((64, 32), (64, 48), (48, 64), (2, 64, 32), (17, 30))
+    for tp in (1, 2, 4):
+        sizes = {"model": tp}
+        for kname, base in kinds.items():
+            for shape in shapes:
+                if len(base) != len(shape):
+                    continue
+                drops = []
+                out = specs.packed_leaf_specs(
+                    base, shape, axis=-2, block=16, axis_sizes=sizes,
+                    path=f"{kname}{shape}", drops=drops)
+                if not specs.congruent(out["packed"], out["scales"]):
+                    errors.append(
+                        f"{kname}{shape} tp={tp}: scales "
+                        f"{out['scales']} not congruent with codes "
+                        f"{out['packed']}")
+                sharded = any(a is not None for a in out["packed"])
+                if tp > 1 and not sharded and not drops:
+                    errors.append(
+                        f"{kname}{shape} tp={tp}: fully replicated "
+                        f"without a drop diagnostic")
+
+    # odd dims must be DIAGNOSED, not silently replicated
+    drops = []
+    specs.packed_leaf_specs((None, "model"), (64, 30), axis=-2, block=16,
+                            axis_sizes={"model": 4}, path="w_odd",
+                            drops=drops)
+    if not drops or "w_odd" not in drops[0]:
+        errors.append(f"odd-dim drop not diagnosed by path: {drops}")
+    drops = []
+    specs.divisible_axes(("model",), (30,), {"model": 4}, path="leaf_odd",
+                         drops=drops)
+    if not drops or "leaf_odd" not in drops[0]:
+        errors.append(f"divisible_axes drop not diagnosed: {drops}")
+
+    # wire-format accounting: NVFP4 block 16 == 4.5 bits/param exactly
+    bits = specs.packed_wire_bits_per_param()
+    if bits != 4.5:
+        errors.append(f"packed wire bits/param {bits} != 4.5")
+    ratio = specs.packed_gather_ratio()
+    if abs(ratio - 16 / 4.5) > 1e-12:
+        errors.append(f"packed gather ratio {ratio} != {16 / 4.5}")
+
+    if errors:
+        for e in errors:
+            print(f"MESH     {e}")
+        print(f"FATAL: {len(errors)} mesh spec error(s)")
+        return 1
+    print("ok       mesh partition specs (CLI grammar, code/scale "
+          "congruence, drop diagnostics, 4.5 bits/param wire accounting)")
+    return 0
+
+
 # ---- dependency report --------------------------------------------------------
 
 
@@ -346,6 +461,8 @@ def main(argv=None) -> int:
         return check_docs()
     if "--serve" in argv:
         return check_serve()
+    if "--mesh" in argv:
+        return check_mesh()
     return check_deps()
 
 

@@ -340,6 +340,31 @@ def serve_sharded_bench():
     return rows
 
 
+def lint_stats_bench():
+    """fp4lint counters for the artifact: per-rule finding counts, files
+    scanned, pragma suppressions and runtime.  Recording them per PR makes
+    the suppressed-vs-fixed trajectory legible — a rising suppressed count
+    with a flat finding count means violations are being pragma'd away
+    instead of fixed.  Jax-free (repro.analysis is pure stdlib)."""
+    import os
+
+    from repro.analysis import RULES, lint_paths
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    findings, stats = lint_paths(root=root)
+    rows = [
+        ("lint", "files_scanned", float(stats.files_scanned)),
+        ("lint", "findings_total", float(stats.findings)),
+        ("lint", "suppressed", float(stats.suppressed)),
+        ("lint", "parse_errors", float(stats.parse_errors)),
+        ("lint", "runtime_ms", stats.runtime_s * 1e3),
+    ]
+    for rule in sorted(RULES):
+        rows.append(("lint", f"findings_{rule.replace('-', '_')}",
+                     float(stats.per_rule.get(rule, 0))))
+    return rows
+
+
 BENCHES = {
     "fig1": pf.fig1_scale_formats,
     "fig2": pf.fig2_block_sizes,
@@ -354,15 +379,16 @@ BENCHES = {
     "serve_throughput": serve_throughput_bench,
     "prefix_cache": prefix_cache_bench,
     "serve_sharded": serve_sharded_bench,
+    "lint": lint_stats_bench,
 }
 
 QUICK = ("table2", "fig4", "kernels", "fig5", "fig6", "serve_weights",
-         "kv_cache", "serve_sharded")
+         "kv_cache", "serve_sharded", "lint")
 
 # the serving artifact (BENCH_serve.json): throughput, cache bytes/token,
-# prefix-cache hit rate, sharded-weights wire accounting
+# prefix-cache hit rate, sharded-weights wire accounting, lint trajectory
 SERVE_BENCHES = ("serve_weights", "kv_cache", "serve_throughput",
-                 "prefix_cache", "serve_sharded")
+                 "prefix_cache", "serve_sharded", "lint")
 
 
 def main(argv=None) -> int:
@@ -397,7 +423,8 @@ def main(argv=None) -> int:
     if args.json:
         import json
         serve_groups = {g: v for g, v in collected.items()
-                        if g.startswith(("serve", "kv_cache", "prefix"))}
+                        if g.startswith(("serve", "kv_cache", "prefix",
+                                         "lint"))}
         with open(args.json, "w") as f:
             json.dump({"generated_by": "benchmarks.run --json",
                        "benches": serve_groups}, f, indent=2, sort_keys=True)

@@ -1,0 +1,30 @@
+"""fp4lint: stdlib-``ast`` static analysis of this repo's FP4 invariants.
+
+Jax-free by construction (nothing here imports jax, numpy or any other
+third-party package), so the whole pass runs in tier-1 preflight
+(``tools/check_env.py --lint``) and in the ``tools/lint.py`` CLI in well
+under a second.
+
+The five shipped rules encode conventions the paper makes explicit and
+invariants past PRs fixed by hand:
+
+  * ``rounding-policy`` — RtN forward / SR backward placement;
+  * ``prng-reuse``      — threefry key stream discipline;
+  * ``spec-canonical``  — PartitionSpec normal form (jit-cache hygiene);
+  * ``trace-hazard``    — host syncs / recompiles inside jitted bodies;
+  * ``packed-dtype``    — 4-bit codes stay on the 4-bit path.
+
+See ``docs/lint.md`` for the rule catalog with firing examples, the
+``# fp4lint: disable=RULE`` pragma and the baseline-file workflow.
+"""
+from repro.analysis.baseline import (baseline_diff, load_baseline,
+                                     render_baseline, write_baseline)
+from repro.analysis.engine import (DEFAULT_SCAN_DIRS, Finding, LintStats,
+                                   lint_file, lint_paths, lint_source)
+from repro.analysis.rules import RULES, all_rule_names
+
+__all__ = [
+    "DEFAULT_SCAN_DIRS", "Finding", "LintStats", "RULES", "all_rule_names",
+    "baseline_diff", "lint_file", "lint_paths", "lint_source",
+    "load_baseline", "render_baseline", "write_baseline",
+]

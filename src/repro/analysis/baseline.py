@@ -1,0 +1,76 @@
+"""Baseline file: grandfathered findings, checked in and diffed exactly.
+
+A baseline entry is one line, the finding's line-number-independent key::
+
+    path:rule:stripped-source-line
+
+(Line numbers are deliberately absent so entries survive edits elsewhere
+in the file; the stripped source line pins the entry to the offending
+statement.)  ``tools/lint.py`` fails on BOTH directions of drift: a
+finding not in the baseline (new violation) and a baseline entry no
+finding matches (stale — the violation was fixed, so the entry must be
+deleted).  ``tools/lint.py --update-baseline`` rewrites the file with a
+deterministic sort so diffs are reviewable.
+
+Duplicate keys are honest: two identical offending lines in one file
+produce two identical entries, and the diff is a multiset comparison.
+"""
+from __future__ import annotations
+
+import collections
+import os
+from typing import Iterable, List, Sequence, Tuple
+
+HEADER = (
+    "# fp4lint baseline — grandfathered findings, one 'path:rule:source'\n"
+    "# key per line. Regenerate with: python tools/lint.py"
+    " --update-baseline\n"
+    "# New findings AND stale entries both fail the lint; fix the code or\n"
+    "# update this file deliberately.\n")
+
+
+def load_baseline(path: str) -> List[str]:
+    """-> list of baseline keys (comments/blank lines skipped); [] when
+    the file does not exist."""
+    if not os.path.exists(path):
+        return []
+    out: List[str] = []
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.rstrip("\n")
+            if not line.strip() or line.lstrip().startswith("#"):
+                continue
+            out.append(line)
+    return out
+
+
+def render_baseline(findings: Iterable) -> str:
+    """Deterministic baseline text for a set of findings."""
+    keys = sorted(f.key() for f in findings)
+    body = "".join(k + "\n" for k in keys)
+    return HEADER + body
+
+
+def write_baseline(path: str, findings: Iterable) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        f.write(render_baseline(findings))
+
+
+def baseline_diff(findings: Sequence, baseline: Sequence[str]
+                  ) -> Tuple[List, List[str]]:
+    """Multiset diff -> (new_findings, stale_entries).
+
+    ``new_findings`` are Finding objects whose key is not covered by the
+    baseline; ``stale_entries`` are baseline keys no current finding
+    matches.  Both empty == the lint is exactly at its recorded state.
+    """
+    remaining = collections.Counter(baseline)
+    new: List = []
+    for f in findings:
+        k = f.key()
+        if remaining[k] > 0:
+            remaining[k] -= 1
+        else:
+            new.append(f)
+    stale = sorted(remaining.elements())
+    return new, stale

@@ -1,0 +1,295 @@
+"""The fp4lint visitor engine: file scanning, pragmas, traced-scope maps.
+
+Pure stdlib (``ast`` + ``tokenize``); rules live in ``rules.py`` and get a
+:class:`FileContext` with everything precomputed once per file:
+
+  * the parsed module and raw source lines;
+  * the pragma map (``# fp4lint: disable=rule-a,rule-b`` comments — a
+    pragma on a line silences that line; a pragma alone on its line also
+    silences the line below it, for statements too long to annotate);
+  * the TRACED-function set: functions that end up as jit / pallas_call /
+    shard_map bodies, found from decorators (``@jax.jit``,
+    ``@partial(jax.jit, ...)``) and call sites (``jax.jit(f)``,
+    ``jax.jit(self._impl)``, ``pl.pallas_call(kernel, ...)``,
+    ``shard_map(body, ...)``) — plus every function nested inside one;
+  * scope classification of the file path (serve/models/kernels/tests/...)
+    shared by the path-scoped rules.
+
+Findings carry a line-number-independent baseline key
+(``path:rule:stripped-source-line``) so grandfathered entries survive
+unrelated edits above them.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import re
+import time
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# the tree the CLI and the tier-1 self-check walk (repo-relative)
+DEFAULT_SCAN_DIRS = ("src", "tools", "benchmarks", "tests")
+
+_PRAGMA_RE = re.compile(
+    r"#\s*fp4lint\s*:\s*disable(?:\s*=\s*([\w,\s-]+))?", re.IGNORECASE)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    path: str          # repo-relative, forward slashes
+    line: int          # 1-based
+    col: int
+    rule: str
+    message: str
+    source: str        # stripped offending source line
+
+    def key(self) -> str:
+        """Baseline identity: line numbers excluded so entries survive
+        edits elsewhere in the file."""
+        return f"{self.path}:{self.rule}:{self.source}"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} {self.message}\n"
+                f"    {self.source}")
+
+
+@dataclasses.dataclass
+class LintStats:
+    """Aggregate counters of one ``lint_paths`` run (bench artifact rows)."""
+
+    files_scanned: int = 0
+    findings: int = 0
+    suppressed: int = 0          # pragma-silenced
+    parse_errors: int = 0
+    runtime_s: float = 0.0
+    per_rule: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+# ---- helpers shared by the rules ----------------------------------------------
+
+
+def terminal_name(node: ast.AST) -> Optional[str]:
+    """Rightmost identifier of a Name/Attribute chain (``jax.random.split``
+    -> ``split``); None for anything else."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def dotted_name(node: ast.AST) -> str:
+    """Best-effort dotted form of a Name/Attribute chain ('' otherwise)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def is_const(node: ast.AST, value) -> bool:
+    return isinstance(node, ast.Constant) and node.value is value
+
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+class FileContext:
+    """Everything a rule needs about one file, computed once."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path.replace(os.sep, "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source)
+        self.pragmas, self.pragmas_standalone = _collect_pragmas(source)
+        self.traced = _traced_functions(self.tree)
+        # path scopes used by rules (posix-relative paths)
+        p = self.path
+        self.in_tests = p.startswith("tests/") or "/tests/" in p
+        self.in_configs = "/configs/" in p
+        self.in_serve = "/serve/" in p
+        self.in_models = "/models/" in p
+        self.in_kernels = "/kernels/" in p
+        self.in_src = p.startswith("src/")
+
+    def source_line(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def suppressed(self, rule: str, lineno: int) -> bool:
+        for ln in (lineno, lineno - 1):
+            rules = self.pragmas.get(ln)
+            if rules is None:
+                continue
+            if rules == "all" or rule in rules:
+                # a standalone-pragma line covers the next line; a trailing
+                # pragma covers only its own line
+                if ln == lineno or self.pragmas_standalone.get(ln):
+                    return True
+        return False
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        return Finding(path=self.path, line=node.lineno,
+                       col=getattr(node, "col_offset", 0), rule=rule,
+                       message=message, source=self.source_line(node.lineno))
+
+
+def _collect_pragmas(source: str):
+    """-> ({lineno: 'all' | set(rule names)}, {lineno: standalone?}) from
+    ``# fp4lint: disable[=...]`` comments."""
+    pragmas: Dict[int, object] = {}
+    standalone: Dict[int, bool] = {}
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _PRAGMA_RE.search(tok.string)
+            if not m:
+                continue
+            names = m.group(1)
+            val = ("all" if not names else
+                   {n.strip() for n in names.split(",") if n.strip()})
+            ln = tok.start[0]
+            prev = pragmas.get(ln)
+            if isinstance(prev, set) and isinstance(val, set):
+                val = prev | val
+            pragmas[ln] = "all" if (prev == "all" or val == "all") else val
+            standalone[ln] = tok.line[: tok.start[1]].strip() == ""
+    except tokenize.TokenError:
+        pass
+    return pragmas, standalone
+
+
+def _partial_target(call: ast.Call) -> Optional[str]:
+    """``partial(f, ...)`` / ``functools.partial(f, ...)`` -> name of f."""
+    if terminal_name(call.func) == "partial" and call.args:
+        return terminal_name(call.args[0])
+    return None
+
+
+_TRACERS = {"jit", "pallas_call", "shard_map", "pjit"}
+
+
+def _traced_functions(tree: ast.Module) -> Set[ast.AST]:
+    """Function nodes whose bodies run under trace: decorator-marked,
+    name-referenced at a jit/pallas_call/shard_map call site, or nested
+    inside either."""
+    traced_names: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if terminal_name(node.func) not in _TRACERS:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            name = terminal_name(arg)
+            if isinstance(arg, ast.Call):
+                name = _partial_target(arg) or name
+            if name:
+                traced_names.add(name)
+
+    def deco_is_tracer(deco: ast.AST) -> bool:
+        return any(terminal_name(n) in _TRACERS for n in ast.walk(deco)
+                   if isinstance(n, (ast.Name, ast.Attribute)))
+
+    traced: Set[ast.AST] = set()
+
+    def visit(node: ast.AST, inside: bool):
+        here = inside
+        if isinstance(node, _FUNC_NODES):
+            here = (inside or node.name in traced_names
+                    or any(deco_is_tracer(d) for d in node.decorator_list))
+            if here:
+                traced.add(node)
+        elif isinstance(node, ast.Lambda) and inside:
+            traced.add(node)
+        for child in ast.iter_child_nodes(node):
+            visit(child, here)
+
+    visit(tree, False)
+    return traced
+
+
+# ---- drivers ------------------------------------------------------------------
+
+
+def lint_source(source: str, path: str = "<string>",
+                rules: Optional[Sequence] = None,
+                stats: Optional[LintStats] = None) -> List[Finding]:
+    """Lint one source string; returns pragma-filtered findings."""
+    from repro.analysis.rules import RULES
+    rules = list(RULES.values()) if rules is None else list(rules)
+    ctx = FileContext(path, source)
+    out: List[Finding] = []
+    for rule in rules:
+        for f in rule.check(ctx):
+            if ctx.suppressed(f.rule, f.line):
+                if stats is not None:
+                    stats.suppressed += 1
+                continue
+            out.append(f)
+    out.sort(key=lambda f: (f.line, f.col, f.rule))
+    if stats is not None:
+        stats.findings += len(out)
+        for f in out:
+            stats.per_rule[f.rule] = stats.per_rule.get(f.rule, 0) + 1
+    return out
+
+
+def lint_file(path: str, root: str = ".",
+              rules: Optional[Sequence] = None,
+              stats: Optional[LintStats] = None) -> List[Finding]:
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    try:
+        return lint_source(source, rel, rules=rules, stats=stats)
+    except SyntaxError as e:
+        if stats is not None:
+            stats.parse_errors += 1
+        return [Finding(path=rel, line=e.lineno or 0, col=e.offset or 0,
+                        rule="parse-error", message=f"syntax error: {e.msg}",
+                        source=(e.text or "").strip())]
+
+
+def iter_py_files(paths: Iterable[str], root: str = ".") -> List[str]:
+    """Expand files/dirs into a deterministic sorted list of .py files."""
+    out: Set[str] = set()
+    for p in paths:
+        ap = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(ap):
+            out.add(ap)
+        elif os.path.isdir(ap):
+            for dirpath, dirnames, filenames in os.walk(ap):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d not in ("__pycache__",))
+                for fn in filenames:
+                    if fn.endswith(".py"):
+                        out.add(os.path.join(dirpath, fn))
+    return sorted(out)
+
+
+def lint_paths(paths: Optional[Iterable[str]] = None, root: str = ".",
+               rules: Optional[Sequence] = None
+               ) -> Tuple[List[Finding], LintStats]:
+    """Lint files/dirs (default: the repo scan set) -> (findings, stats)."""
+    t0 = time.perf_counter()
+    stats = LintStats()
+    findings: List[Finding] = []
+    for f in iter_py_files(paths or DEFAULT_SCAN_DIRS, root):
+        stats.files_scanned += 1
+        findings.extend(lint_file(f, root=root, rules=rules, stats=stats))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    stats.findings = len(findings)
+    stats.runtime_s = time.perf_counter() - t0
+    return findings, stats

@@ -1,0 +1,457 @@
+"""The fp4lint rule set: five machine-checked invariants of this repo.
+
+Every rule's docstring carries a minimal FIRING example (and its clean
+twin where the fix is non-obvious); ``tests/test_lint.py`` executes those
+examples against the rule.  Rules are registered in :data:`RULES` by
+their kebab-case name — the name used in ``# fp4lint: disable=<name>``
+pragmas and baseline entries.
+
+Adding a rule: subclass :class:`Rule`, set ``name``/``summary``, write a
+docstring with a firing example, implement ``check(ctx)`` yielding
+``ctx.finding(self.name, node, message)``, and add an instance to
+``RULES``.  Keep it stdlib-only — the pass must stay importable without
+jax (``tools/check_env.py --lint`` runs before the dependency report).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional
+
+from repro.analysis.engine import (FileContext, Finding, dotted_name,
+                                   is_const, terminal_name)
+
+
+class Rule:
+    name = "abstract"
+    summary = ""
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+# ---- 1. rounding-policy -------------------------------------------------------
+
+
+class RoundingPolicyRule(Rule):
+    """Stochastic rounding stays on the backward/update path — the forward
+    and serving paths are RtN (FP4 All the Way §rounding; Quartet II on SR
+    placement for unbiased gradients).
+
+    Fires on any construction of an SR quant spec — ``stochastic=True``
+    keyword or ``.with_rounding(True)`` — in the forward-only scopes:
+    ``serve/`` and ``models/`` files (module or function scope — an SR
+    spec must not even be constructible there), ``kernels/`` decode paths
+    (module scope or a ``*decode*`` function), and anywhere as an argument
+    of a ``pack_quantize`` call (the packed weight store is RtN-only).
+
+    FIRES (in src/repro/serve/ or src/repro/models/)::
+
+        spec = BlockQuantSpec(stochastic=True)
+        sr = NVFP4.with_rounding(True)
+
+    CLEAN::
+
+        spec = BlockQuantSpec()                  # RtN default
+        bwd = NVFP4.with_rounding(True)          # in train/ or core/
+    """
+
+    name = "rounding-policy"
+    summary = "SR spec constructed on a forward/serving path"
+
+    @staticmethod
+    def _is_sr_spec(node: ast.Call) -> bool:
+        if any(kw.arg == "stochastic" and is_const(kw.value, True)
+               for kw in node.keywords):
+            return True
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "with_rounding"
+                and node.args and is_const(node.args[0], True)):
+            return True
+        return False
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        fwd_file = ctx.in_serve or ctx.in_models
+        if ctx.in_tests:
+            fwd_file = False
+
+        # function-name stack to classify kernels/ decode paths
+        def walk(node, fn_stack: List[str]):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fn_stack = fn_stack + [node.name]
+            if isinstance(node, ast.Call):
+                in_decode_kernel = ctx.in_kernels and (
+                    not fn_stack or "decode" in fn_stack[-1])
+                if self._is_sr_spec(node) and (fwd_file or in_decode_kernel):
+                    where = ("serving/model" if fwd_file
+                             else "kernel decode")
+                    yield ctx.finding(
+                        self.name, node,
+                        f"stochastic-rounding spec constructed on a "
+                        f"{where} path (forward/serving is RtN-only)")
+                if terminal_name(node.func) == "pack_quantize":
+                    for sub in ast.walk(node):
+                        if (isinstance(sub, ast.Call) and sub is not node
+                                and self._is_sr_spec(sub)):
+                            yield ctx.finding(
+                                self.name, sub,
+                                "SR spec flows into pack_quantize "
+                                "(packed weight store is RtN-only)")
+            for child in ast.iter_child_nodes(node):
+                yield from walk(child, fn_stack)
+
+        yield from walk(ctx.tree, [])
+
+
+# ---- 2. prng-reuse ------------------------------------------------------------
+
+
+_SPLITTERS = {"split", "fold_in", "clone", "key_data", "wrap_key_data",
+              "PRNGKey", "key"}
+
+
+class PrngReuseRule(Rule):
+    """Threefry keys are single-use: a key binding consumed by two
+    ``jax.random.*`` sampling calls without an intervening ``split`` /
+    ``fold_in`` rebinding replays the stream (PR 5's "root key split
+    FIRST" bug).  Also fires on ``PRNGKey(<literal>)`` in library code
+    (``src/``, excluding ``configs/``) — hard-coded seeds belong in
+    configs, CLIs and tests, not inside the library.
+
+    FIRES::
+
+        key = jax.random.PRNGKey(seed)
+        a = jax.random.normal(key, shape)
+        b = jax.random.uniform(key, shape)       # same binding, reused
+
+    CLEAN::
+
+        key = jax.random.PRNGKey(seed)
+        ka, kb = jax.random.split(key)
+        a = jax.random.normal(ka, shape)
+        b = jax.random.uniform(kb, shape)
+    """
+
+    name = "prng-reuse"
+    summary = "PRNG key reused across sampling calls / literal seed"
+
+    @staticmethod
+    def _is_jax_random_call(node: ast.Call) -> Optional[str]:
+        """-> terminal fn name for jax.random.* / random.* calls."""
+        dn = dotted_name(node.func)
+        if ".random." in dn or dn.startswith("random."):
+            return terminal_name(node.func)
+        return None
+
+    def _scan_block(self, ctx: FileContext, body,
+                    consumed: Optional[Dict[str, int]] = None,
+                    gen: Optional[Dict[str, int]] = None
+                    ) -> Iterator[Finding]:
+        """Straight-line scan of one statement list: per-name generation
+        counters; a sampling call consumes the binding's generation.
+        Branch bodies recurse with COPIED state (exclusive branches never
+        flag each other); nested defs are skipped here — ``check`` scans
+        every function exactly once."""
+        consumed = {} if consumed is None else consumed
+        gen = {} if gen is None else gen
+
+        def rebind(target):
+            for n in ast.walk(target):
+                if isinstance(n, ast.Name):
+                    gen[n.id] = gen.get(n.id, 0) + 1
+
+        def scan_expr(expr) -> Iterator[Finding]:
+            for sub in ast.walk(expr):
+                if not isinstance(sub, ast.Call):
+                    continue
+                fn = self._is_jax_random_call(sub)
+                if fn is None or fn in _SPLITTERS:
+                    continue
+                for arg in sub.args[:1]:   # key is the first positional arg
+                    if not isinstance(arg, ast.Name):
+                        continue
+                    g = gen.get(arg.id, 0)
+                    if consumed.get(arg.id) == g:
+                        yield ctx.finding(
+                            self.name, sub,
+                            f"key {arg.id!r} consumed by a second "
+                            f"jax.random sampling call without an "
+                            f"intervening split/fold_in rebinding")
+                    consumed[arg.id] = g
+
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(node, ast.If):
+                yield from scan_expr(node.test)
+                for branch in (node.body, node.orelse):
+                    yield from self._scan_block(ctx, branch,
+                                                dict(consumed), dict(gen))
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                yield from scan_expr(node.iter)
+                rebind(node.target)        # loop var rebinds per iteration
+                yield from self._scan_block(ctx, node.body,
+                                            dict(consumed), dict(gen))
+            elif isinstance(node, ast.While):
+                yield from scan_expr(node.test)
+                yield from self._scan_block(ctx, node.body,
+                                            dict(consumed), dict(gen))
+            elif isinstance(node, (ast.With, ast.AsyncWith)):
+                for item in node.items:
+                    yield from scan_expr(item.context_expr)
+                yield from self._scan_block(ctx, node.body, consumed, gen)
+            elif isinstance(node, ast.Try):
+                for blk in (node.body, node.orelse, node.finalbody):
+                    yield from self._scan_block(ctx, blk,
+                                                dict(consumed), dict(gen))
+                for h in node.handlers:
+                    yield from self._scan_block(ctx, h.body,
+                                                dict(consumed), dict(gen))
+            else:
+                yield from scan_expr(node)
+                if isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        rebind(t)
+                elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                    rebind(node.target)
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._scan_block(ctx, node.body)
+            if (isinstance(node, ast.Call)
+                    and terminal_name(node.func) == "PRNGKey"
+                    and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, int)
+                    and ctx.in_src and not ctx.in_configs
+                    and not ctx.in_tests):
+                yield ctx.finding(
+                    self.name, node,
+                    f"PRNGKey({node.args[0].value}) literal seed in "
+                    f"library code — thread the seed from a config/CLI")
+
+
+# ---- 3. spec-canonical --------------------------------------------------------
+
+
+class SpecCanonicalRule(Rule):
+    """PartitionSpecs must be in GSPMD normal form: trailing ``None`` dims
+    stripped.  ``P(None, None)`` equals ``P()`` to GSPMD but NOT to the
+    jit compile cache's sharding equality, so a non-canonical spec on a
+    jit input silently fragments the cache into one entry per spelling
+    (PR 6; ``distributed.specs.strip_trailing_none`` is the canonical
+    form used everywhere else).
+
+    FIRES::
+
+        spec = P("model", None)
+        sh = NamedSharding(mesh, PartitionSpec(None, None))
+
+    CLEAN::
+
+        spec = P("model")
+        sh = NamedSharding(mesh, PartitionSpec())
+    """
+
+    name = "spec-canonical"
+    summary = "PartitionSpec literal with trailing None dims"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = terminal_name(node.func)
+            if fn not in ("PartitionSpec", "P"):
+                continue
+            if fn == "P" and dotted_name(node.func) not in (
+                    "P", "jax.sharding.PartitionSpec"):
+                continue                    # e.g. some_mod.P(...) helper
+            if node.args and is_const(node.args[0], None) \
+                    and all(is_const(a, None) for a in node.args):
+                n = len(node.args)
+                yield ctx.finding(
+                    self.name, node,
+                    f"all-replicated spec spelled with {n} explicit "
+                    f"None dim(s) — use {fn}() (canonical form; "
+                    f"spec equality keys the jit cache)")
+            elif node.args and is_const(node.args[-1], None):
+                yield ctx.finding(
+                    self.name, node,
+                    f"trailing None dim in {fn}(...) literal — strip it "
+                    f"(GSPMD normalizes, the jit cache does not)")
+
+
+# ---- 4. trace-hazard ----------------------------------------------------------
+
+
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "itemsize", "nbytes"}
+_STATIC_CALLS = {"len", "range", "enumerate", "zip"}
+
+
+def _static_arg(node: ast.AST) -> bool:
+    """True when coercing this expression is trace-safe: constants and
+    shape/dtype metadata (static at trace time)."""
+    if isinstance(node, ast.Constant):
+        return True
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+            return True
+        if isinstance(sub, ast.Call) \
+                and terminal_name(sub.func) in _STATIC_CALLS:
+            return True
+    return False
+
+
+class TraceHazardRule(Rule):
+    """No host syncs or recompile triggers inside traced bodies: code that
+    runs under ``jit`` / ``shard_map`` / ``pallas_call`` must not coerce
+    traced values to Python scalars (``.item()``, ``int()`` / ``float()``
+    / ``bool()``), materialize them on host (``np.asarray`` /
+    ``np.array``), or format them into f-strings — each is at best a
+    device sync per call and at worst a recompile per value (the hazards
+    the engines' jit-cache==1 asserts only catch dynamically).
+
+    Coercions of static metadata (``x.shape``, ``x.ndim``, ``len(...)``)
+    are trace-safe and exempt, as are f-strings inside ``raise``
+    statements — error messages format once at trace(-failure) time, not
+    per executed step.
+
+    FIRES::
+
+        @jax.jit
+        def f(x):
+            return x * float(x.mean())       # host sync under trace
+
+    CLEAN::
+
+        @jax.jit
+        def f(x):
+            return x * x.mean()
+        def host_loop(x):                    # not traced: coerce freely
+            return float(jax.jit(lambda y: y.mean())(x))
+    """
+
+    name = "trace-hazard"
+    summary = "host sync / recompile trigger inside a traced body"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn in ctx.traced:
+            body = fn.body if not isinstance(fn, ast.Lambda) else [fn.body]
+            for stmt in body:
+                yield from self._scan(ctx, stmt)
+
+    def _scan(self, ctx: FileContext, node: ast.AST) -> Iterator[Finding]:
+        in_raise = {id(s) for r in ast.walk(node) if isinstance(r, ast.Raise)
+                    for s in ast.walk(r) if isinstance(s, ast.JoinedStr)}
+        for sub in ast.walk(node):
+            # don't descend into nested defs here: they are themselves in
+            # ctx.traced and get scanned once (avoids duplicate findings)
+            if isinstance(sub, ast.Call):
+                fn = terminal_name(sub.func)
+                dn = dotted_name(sub.func)
+                if (isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr == "item" and not sub.args):
+                    yield ctx.finding(self.name, sub,
+                                      ".item() syncs the host inside a "
+                                      "traced body")
+                elif fn in ("int", "float", "bool") \
+                        and isinstance(sub.func, ast.Name) and sub.args \
+                        and not _static_arg(sub.args[0]):
+                    yield ctx.finding(
+                        self.name, sub,
+                        f"{fn}() coercion of a (possibly traced) value "
+                        f"inside a traced body — host sync; hoist it or "
+                        f"keep it on device")
+                elif dn in ("np.asarray", "np.array", "numpy.asarray",
+                            "numpy.array") and sub.args \
+                        and not _static_arg(sub.args[0]):
+                    yield ctx.finding(
+                        self.name, sub,
+                        f"{dn}() materializes a traced value on host "
+                        f"inside a traced body (use jnp, or move to the "
+                        f"host loop)")
+            elif isinstance(sub, ast.JoinedStr) and id(sub) not in in_raise:
+                if any(isinstance(v, ast.FormattedValue)
+                       and not _static_arg(v.value)
+                       for v in sub.values):
+                    yield ctx.finding(
+                        self.name, sub,
+                        "f-string formats a (possibly traced) value "
+                        "inside a traced body — per-value recompile / "
+                        "host sync hazard")
+
+
+# ---- 5. packed-dtype ----------------------------------------------------------
+
+
+_PACKED_NAME_RE = re.compile(
+    r"(^|_)(packed|codes?|nibbles?|scales|qscales)($|_)", re.IGNORECASE)
+_WIDE_DTYPES = {"float32", "float64", "bfloat16", "float16",
+                "int32", "int64"}
+
+
+def _wide_dtype_arg(node: ast.AST) -> Optional[str]:
+    """'float32' etc. when the expression names a wide dtype, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str) \
+            and node.value in _WIDE_DTYPES:
+        return node.value
+    name = terminal_name(node)
+    if name in _WIDE_DTYPES:
+        return name
+    return None
+
+
+class PackedDtypeRule(Rule):
+    """Packed 4-bit storage never widens off the 4-bit path: uint8 nibble
+    codes and f8 block scales may only be upcast at the sanctioned
+    dequant sites (``core/quantize.py`` and ``kernels/``), where the
+    reconstruction stays bit-exact by construction.  Anywhere else, an
+    ``astype`` of a packed/codes/scales-named value to a wide dtype is a
+    silent fork off the packed path (it decodes nibble PAIRS as numbers,
+    or re-rounds scales) and inflates the 0.56 bytes/param store.
+
+    FIRES (outside core/quantize.py and kernels/)::
+
+        w = qt.packed.astype(jnp.float32)
+        s = scales.astype(jnp.bfloat16)
+
+    CLEAN::
+
+        w = qt.dequant()                     # the sanctioned reconstruction
+        n = qt.packed.astype(jnp.uint8)      # storage-width cast
+    """
+
+    name = "packed-dtype"
+    summary = "wide-dtype cast of packed codes/scales outside dequant sites"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if ctx.in_kernels or ctx.path.endswith("core/quantize.py") \
+                or ctx.in_tests:
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if not (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype" and node.args):
+                continue
+            recv = terminal_name(node.func.value)
+            if recv is None or not _PACKED_NAME_RE.search(recv):
+                continue
+            wide = _wide_dtype_arg(node.args[0])
+            if wide:
+                yield ctx.finding(
+                    self.name, node,
+                    f"{recv}.astype({wide}) widens packed storage "
+                    f"outside the sanctioned dequant sites "
+                    f"(core/quantize.py, kernels/) — use .dequant()")
+
+
+RULES: Dict[str, Rule] = {r.name: r for r in (
+    RoundingPolicyRule(), PrngReuseRule(), SpecCanonicalRule(),
+    TraceHazardRule(), PackedDtypeRule())}
+
+
+def all_rule_names():
+    return sorted(RULES)

@@ -89,7 +89,7 @@ def _spec_for(kind: str, ndim: int, mesh: Mesh,
     if kind == "oi":
         return P(*lead, tp, fsdp) if ndim >= 2 else P(tp)
     if kind == "d_rep":
-        return P(*lead, fsdp, None) if ndim >= 2 else P()
+        return P(*lead, fsdp) if ndim >= 2 else P()
     if kind == "vocab_d":
         return P(tp, fsdp)
     if kind == "d_vocab":
@@ -173,7 +173,7 @@ def params_specs(params, mesh: Mesh):
 
 def batch_spec(mesh: Mesh) -> P:
     """(B, S) token batches: batch over DP axes."""
-    return P(dp_axes(mesh), None)
+    return P(dp_axes(mesh))
 
 
 def batch_shardings(batch_struct, mesh: Mesh):

@@ -395,7 +395,7 @@ def tp_fp4_matmul(x, w, *, cfg, mesh, seed=None, parallel: str = "column",
     w_specs = dataclasses.replace(
         w, packed=P(k_spec, n_spec), scales=P(k_spec, n_spec), tscale=P())
     x_spec = P(None, tp if parallel == "row" else None)
-    out_spec = P(None, tp) if parallel == "column" else P(None, None)
+    out_spec = P(None, tp) if parallel == "column" else P()
 
     def body(qx_l, w_l):
         if gather_axis:

@@ -77,12 +77,15 @@ def main(argv=None):
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N first")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for weight init (ignored with "
+                         "--ckpt-dir when a checkpoint is restored)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    params = registry.init_params(cfg, jax.random.PRNGKey(args.seed))
     if args.ckpt_dir:
         step, restored = ckpt.restore_latest(args.ckpt_dir, params)
         if restored is not None:

@@ -36,13 +36,13 @@ def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
 
 
 def params_struct(cfg: ModelConfig):
-    return jax.eval_shape(
-        lambda: registry.init_params(cfg, jax.random.PRNGKey(0)))
+    return jax.eval_shape(  # shape-only: the key value never materializes
+        lambda: registry.init_params(cfg, jax.random.PRNGKey(0)))  # fp4lint: disable=prng-reuse
 
 
 def train_state_struct(cfg: ModelConfig, tcfg: step_mod.TrainConfig):
-    return jax.eval_shape(
-        lambda: step_mod.init_state(cfg, tcfg, jax.random.PRNGKey(0)))
+    return jax.eval_shape(  # shape-only: the key value never materializes
+        lambda: step_mod.init_state(cfg, tcfg, jax.random.PRNGKey(0)))  # fp4lint: disable=prng-reuse
 
 
 def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
@@ -89,12 +89,10 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         state = train_state_struct(cfg, tcfg)
         batch = batch_struct(cfg, shape)
         st_sh = step_mod.state_shardings(state, mesh)
-        b_spec = P(dp, None) if shape.global_batch % dp_size == 0 else P()
         b_sh = jax.tree.map(
             lambda x: NamedSharding(
                 mesh, P(dp, *(None,) * (len(x.shape) - 1))
                 if x.shape[0] % dp_size == 0 else P()), batch)
-        del b_spec
         fn = step_mod.make_train_step(cfg, qcfg, tcfg, mesh)
         return Cell("train", fn, (state, batch), (st_sh, b_sh), donate=(0,))
 
@@ -123,7 +121,7 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     p_sh = shd.params_shardings(params, mesh)
     c_sh = shd.cache_specs(carry, mesh, shape.global_batch)
     t_sh = NamedSharding(
-        mesh, P(dp, None) if shape.global_batch % dp_size == 0 else P())
+        mesh, P(dp) if shape.global_batch % dp_size == 0 else P())
     raw = serve_step_fn(cfg, qcfg)
 
     def serve_step(params, tokens, carry):

@@ -49,6 +49,8 @@ def main(argv=None):
                     help=">0: fixed-step QAF switch; 0: √3-threshold auto")
     ap.add_argument("--no-qaf", action="store_true")
     ap.add_argument("--log-json", default=None)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="root PRNG seed (init + data stream)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -73,7 +75,7 @@ def main(argv=None):
                           global_batch=args.batch)
 
     trainer = Trainer(cfg, QUANT[args.quant](), tcfg, run_cfg, data_cfg)
-    trainer.run(jax.random.PRNGKey(0))
+    trainer.run(jax.random.PRNGKey(args.seed))
 
     for h in trainer.history[:: max(1, len(trainer.history) // 20)]:
         print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "

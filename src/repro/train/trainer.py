@@ -46,6 +46,7 @@ class TrainerConfig:
     keep_ckpts: int = 3
     log_every: int = 10
     straggler_factor: float = 3.0
+    seed: int = 0                     # root key when run() gets no key
     qaf: qaf.QAFConfig = dataclasses.field(default_factory=qaf.QAFConfig)
     # emit the quantize-once packed NVFP4 serving artifact at the end of
     # the run (<ckpt_dir>/serve_packed) — deploys restore 4-bit weights
@@ -101,7 +102,8 @@ class Trainer:
     # ---- the loop --------------------------------------------------------
 
     def run(self, key=None) -> step_mod.TrainState:
-        key = key if key is not None else jax.random.PRNGKey(0)
+        key = key if key is not None else jax.random.PRNGKey(
+            self.run_cfg.seed)
         self._install_sigterm()
         state = self.init_or_restore(key)
         self._build_step()

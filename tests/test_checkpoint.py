@@ -15,12 +15,12 @@ from repro.checkpoint import ckpt
 
 
 def _tree(key=0):
-    k = jax.random.PRNGKey(key)
+    kw, km = jax.random.split(jax.random.PRNGKey(key))
     return {
-        "w": jax.random.normal(k, (16, 32), jnp.float32),
+        "w": jax.random.normal(kw, (16, 32), jnp.float32),
         "b": jnp.zeros((32,), jnp.bfloat16),
         "step": jnp.asarray(7, jnp.int32),
-        "nested": {"m": jax.random.normal(k, (4, 8), jnp.float32)},
+        "nested": {"m": jax.random.normal(km, (4, 8), jnp.float32)},
     }
 
 

@@ -52,6 +52,7 @@ def test_divisible_drops_odd_axes():
     # fully-dropped specs come back in CANONICAL form (trailing Nones
     # stripped): P() == P(None, None) to GSPMD but not to the jit compile
     # cache's sharding equality, which is why _divisible normalizes
+    # fp4lint: disable=spec-canonical  (non-canonical input is the point)
     assert shd._divisible(P(("pod", "data"), None), (10, 64),
                           _FakeMesh()) == P()
 

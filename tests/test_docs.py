@@ -54,6 +54,21 @@ def test_check_env_serve_mode(capsys):
     assert "serving scheduler invariants" in capsys.readouterr().out
 
 
+def test_check_env_lint_mode(capsys):
+    """--lint: the fp4lint AST invariants, baseline-exact (jax-free)."""
+    assert check_env.main(["--lint"]) == 0, capsys.readouterr().out
+    assert "fp4lint" in capsys.readouterr().out
+
+
+def test_check_env_all_mode(capsys):
+    """--all: every self-check (docs, serve, mesh, lint, deps) in one go."""
+    assert check_env.main(["--all"]) == 0, capsys.readouterr().out
+    out = capsys.readouterr().out
+    for marker in ("docs snippets", "serving scheduler",
+                   "mesh partition specs", "fp4lint"):
+        assert marker in out, (marker, out)
+
+
 def test_docs_guard_validates_mesh_specs():
     """Quoted ``--mesh`` values must parse with the real CLI grammar, and
     string-literal kwarg VALUES (mesh="tp=2") must not read as kwargs."""

@@ -4,6 +4,8 @@
   PYTHONPATH=src python tools/check_env.py --docs   # docs snippet check
   PYTHONPATH=src python tools/check_env.py --serve  # scheduler invariants
   PYTHONPATH=src python tools/check_env.py --mesh   # partition-spec check
+  PYTHONPATH=src python tools/check_env.py --lint   # fp4lint AST invariants
+  PYTHONPATH=src python tools/check_env.py --all    # every self-check
 
 Default mode prints one line per dependency so a red test run can be
 triaged at a glance instead of letting pytest collection explode on an
@@ -30,6 +32,15 @@ layer (repro.distributed.specs): ``--mesh tp=N`` CLI grammar, the
 code/scale congruence invariant of packed leaves, drop diagnostics for
 odd dims, and the 4.5 bits/param packed wire accounting.  Also tier-1
 (tests/test_docs.py).
+
+``--lint`` runs fp4lint (repro.analysis, stdlib-ast, jax-free) over the
+whole repo and fails on any finding outside tools/lint_baseline.txt or
+any stale baseline entry — the static invariants (rounding policy, PRNG
+stream discipline, PartitionSpec canonical form, trace hazards, packed
+dtypes; see docs/lint.md).  Also tier-1 (tests/test_docs.py).
+
+``--all`` runs every self-check above (docs, serve, mesh, lint) plus the
+dependency report, and fails if any of them does.
 """
 from __future__ import annotations
 
@@ -45,7 +56,8 @@ OPTIONAL = {
     "hypothesis": "property tests fall back to tests/_hyp.py sweeps",
 }
 
-DOC_FILES = ("README.md", "docs/formats.md", "docs/serving.md")
+DOC_FILES = ("README.md", "docs/formats.md", "docs/serving.md",
+             "docs/lint.md")
 
 
 def _probe(name: str):
@@ -421,6 +433,40 @@ def check_mesh() -> int:
     return 0
 
 
+# ---- fp4lint self-check -------------------------------------------------------
+
+
+def check_lint() -> int:
+    """Run fp4lint over the repo scan set and diff the baseline exactly.
+    Jax-free (repro.analysis is pure stdlib), so this runs even when the
+    accelerator stack is broken."""
+    for base in ("src",):
+        p = os.path.join(REPO_ROOT, base)
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    from repro.analysis import baseline_diff, lint_paths, load_baseline
+
+    findings, stats = lint_paths(root=REPO_ROOT)
+    baseline = load_baseline(
+        os.path.join(REPO_ROOT, "tools", "lint_baseline.txt"))
+    new, stale = baseline_diff(findings, baseline)
+    for f in new:
+        print(f"LINT     {f.render()}")
+    for key in stale:
+        print(f"LINT     stale baseline entry: {key}")
+    if new or stale:
+        print(f"FATAL: {len(new)} new finding(s), {len(stale)} stale "
+              f"baseline entr{'y' if len(stale) == 1 else 'ies'} "
+              f"(python tools/lint.py for details)")
+        return 1
+    per_rule = ", ".join(f"{k}={v}" for k, v in
+                         sorted(stats.per_rule.items())) or "0 findings"
+    print(f"ok       fp4lint ({stats.files_scanned} files, {per_rule}, "
+          f"{stats.suppressed} pragma-suppressed, baseline exact, "
+          f"{stats.runtime_s * 1e3:.0f} ms)")
+    return 0
+
+
 # ---- dependency report --------------------------------------------------------
 
 
@@ -457,12 +503,20 @@ def check_deps() -> int:
 
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
+    if "--all" in argv:
+        rc = 0
+        for check in (check_docs, check_serve, check_mesh, check_lint,
+                      check_deps):
+            rc |= check()
+        return rc
     if "--docs" in argv:
         return check_docs()
     if "--serve" in argv:
         return check_serve()
     if "--mesh" in argv:
         return check_mesh()
+    if "--lint" in argv:
+        return check_lint()
     return check_deps()
 
 

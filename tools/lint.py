@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""fp4lint CLI: run the repo's AST invariant rules and diff the baseline.
+
+Usage:
+    python tools/lint.py                    # scan src/ tools/ benchmarks/ tests/
+    python tools/lint.py src/repro/serve    # scan a subset
+    python tools/lint.py --update-baseline  # rewrite tools/lint_baseline.txt
+    python tools/lint.py --stats            # print counters after findings
+
+Exit status is non-zero when any finding is not in the baseline OR any
+baseline entry is stale (no longer matched by a finding) — both
+directions of drift fail, so the checked-in baseline is always exact.
+
+Jax-free: imports only ``repro.analysis`` (pure stdlib), so this runs
+before the environment is otherwise usable (tier-1 preflight via
+``tools/check_env.py --lint``).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+from repro.analysis import (DEFAULT_SCAN_DIRS, all_rule_names,  # noqa: E402
+                            baseline_diff, lint_paths, load_baseline,
+                            write_baseline)
+
+DEFAULT_BASELINE = os.path.join("tools", "lint_baseline.txt")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help=f"files/dirs to scan (default: "
+                         f"{' '.join(DEFAULT_SCAN_DIRS)})")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file, repo-relative (default: "
+                         "tools/lint_baseline.txt)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings "
+                         "(deterministic sort) instead of failing")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: report every finding")
+    ap.add_argument("--stats", action="store_true",
+                    help="print per-rule counters and runtime")
+    args = ap.parse_args(argv)
+
+    findings, stats = lint_paths(args.paths or None, root=REPO_ROOT)
+
+    baseline_path = os.path.join(REPO_ROOT, args.baseline)
+    if args.update_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"wrote {len(findings)} baseline entr"
+              f"{'y' if len(findings) == 1 else 'ies'} -> {args.baseline}")
+        return 0
+
+    if args.no_baseline:
+        new, stale = list(findings), []
+    else:
+        # a partial scan can't see the whole baseline: only judge entries
+        # for files we actually scanned, and never report staleness for
+        # the rest
+        baseline = load_baseline(baseline_path)
+        if args.paths:
+            scanned = {f.path for f in findings}
+            prefixes = tuple(p.rstrip("/") + "/" for p in args.paths)
+            baseline = [b for b in baseline
+                        if b.split(":", 1)[0] in scanned
+                        or b.startswith(prefixes)
+                        or any(b.split(":", 1)[0] == p.rstrip("/")
+                               for p in args.paths)]
+        new, stale = baseline_diff(findings, baseline)
+
+    for f in new:
+        print(f.render())
+    for key in stale:
+        print(f"stale baseline entry (violation fixed? delete it): {key}")
+
+    if args.stats or new or stale:
+        per_rule = ", ".join(f"{k}={v}" for k, v in
+                             sorted(stats.per_rule.items())) or "none"
+        print(f"fp4lint: {stats.files_scanned} files, "
+              f"{stats.findings} finding(s) ({per_rule}), "
+              f"{stats.suppressed} pragma-suppressed, "
+              f"{len(new)} new, {len(stale)} stale, "
+              f"{stats.runtime_s * 1e3:.0f} ms "
+              f"[rules: {', '.join(all_rule_names())}]")
+    if new or stale:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -340,6 +340,70 @@ def serve_sharded_bench():
     return rows
 
 
+def traffic_bench():
+    """Multi-tenant traffic trajectory: TTFT/TPOT/goodput percentiles.
+
+    A seeded three-tenant workload (serve/workload.py: Poisson + burst
+    arrivals, per-tenant prompt mixes, shared system prompts, aborts and
+    timeouts) streams through the continuous engine with chunked prefill
+    + the prefix cache; serve/metrics.py records the lifecycle in
+    SIMULATED TICKS.  Every number here is tick/accounting-based and
+    deterministic — the recorded trajectory is comparable across PRs
+    (no wall clock anywhere)."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.serve import (ContinuousEngine, ServeConfig, TenantSpec,
+                             WorkloadConfig, as_requests,
+                             generate_workload)
+
+    cfg = get_config("llama2-60m").smoke()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    wcfg = WorkloadConfig(tenants=(
+        TenantSpec("chat", rate=0.45, prompt_lens=(6, 12, 20),
+                   prompt_probs=(0.5, 0.3, 0.2), system_prompt_len=16,
+                   max_new=10, deadline_slack=24),
+        TenantSpec("batch", rate=0.15, prompt_lens=(40,), max_new=6,
+                   timeout=12, burst_every=10, burst_size=2),
+        # long prompts + a tight abort window: the aborts land MID-
+        # chunked-prefill, so the recorded trajectory exercises the
+        # cancellation path, not just happy completions
+        TenantSpec("flaky", rate=0.2, prompt_lens=(60,), max_new=8,
+                   abort_prob=0.6, abort_after=2),
+    ), ticks=24, seed=11, vocab=cfg.vocab_size)
+    reqs = as_requests(generate_workload(wcfg))
+    scfg = ServeConfig(batch_size=4, max_len=96, eos_id=-1,
+                       kv_cache_format="nvfp4", page_size=16,
+                       decode_chunk=8, prefix_cache=True,
+                       prefill_chunk=16)
+    eng = ContinuousEngine(cfg, params, scfg)
+    eng.run(reqs)
+    s = eng.metrics.summary()
+    rows = [
+        ("traffic", "requests_submitted", float(s["submitted"])),
+        ("traffic", "requests_completed", float(s["completed"])),
+        ("traffic", "requests_cancelled", float(s["cancelled"])),
+        ("traffic", "goodput", float(s["goodput"])),
+        ("traffic", "ticks", float(s["ticks"])),
+    ]
+    for met in ("ttft_ticks", "tpot_ticks"):
+        for p in ("p50", "p95", "p99"):
+            rows.append(("traffic", f"{met}_{p}", float(s[met][p])))
+    rows += [
+        ("traffic", "queue_depth_p95", float(s["queue_depth"]["p95"])),
+        ("traffic", "queue_depth_max", float(s["queue_depth"]["max"])),
+        ("traffic", "preemptions", float(s["counters"]["preemptions"])),
+        ("traffic", "prefix_hit_rate", eng.scheduler.prefix_hit_rate),
+        ("traffic", "prefill_chunks_issued",
+         float(len(eng.scheduler.prefill_log))),
+        ("traffic", "chunk_compiles", float(eng.chunk_compiles)),
+        ("traffic", "suffix_compiles",
+         float(eng.prefill_suffix_compiles)),
+        ("traffic", "decode_compiles", float(eng.decode_compiles)),
+    ]
+    return rows
+
+
 def lint_stats_bench():
     """fp4lint counters for the artifact: per-rule finding counts, files
     scanned, pragma suppressions and runtime.  Recording them per PR makes
@@ -379,16 +443,31 @@ BENCHES = {
     "serve_throughput": serve_throughput_bench,
     "prefix_cache": prefix_cache_bench,
     "serve_sharded": serve_sharded_bench,
+    "traffic": traffic_bench,
     "lint": lint_stats_bench,
 }
 
 QUICK = ("table2", "fig4", "kernels", "fig5", "fig6", "serve_weights",
-         "kv_cache", "serve_sharded", "lint")
+         "kv_cache", "serve_sharded", "traffic", "lint")
 
 # the serving artifact (BENCH_serve.json): throughput, cache bytes/token,
-# prefix-cache hit rate, sharded-weights wire accounting, lint trajectory
+# prefix-cache hit rate, sharded-weights wire accounting, the multi-
+# tenant TTFT/TPOT/goodput trajectory, lint trajectory
 SERVE_BENCHES = ("serve_weights", "kv_cache", "serve_throughput",
-                 "prefix_cache", "serve_sharded", "lint")
+                 "prefix_cache", "serve_sharded", "traffic", "lint")
+
+
+def _merge_bench_json(existing: dict, new_groups: dict) -> dict:
+    """Merge freshly collected per-bench groups into an existing
+    BENCH_serve.json payload: replaced at GROUP granularity, every other
+    recorded group kept verbatim — a partial re-run (``--bench traffic
+    --json``) can never clobber the rest of the recorded trajectory."""
+    benches = dict(existing.get("benches", {}) or {})
+    benches.update(new_groups)
+    out = dict(existing)
+    out["generated_by"] = "benchmarks.run --json"
+    out["benches"] = benches
+    return out
 
 
 def main(argv=None) -> int:
@@ -405,7 +484,9 @@ def main(argv=None) -> int:
     names = ([args.bench] if args.bench
              else sorted(BENCHES) if args.full
              else list(SERVE_BENCHES) if args.json else list(QUICK))
-    if args.json:
+    if args.json and not args.bench:
+        # an explicit --bench stays a PARTIAL run: only that bench's
+        # group is (re)written, the merge below keeps the rest
         names += [n for n in SERVE_BENCHES if n not in names]
     collected = {}
     print("bench,name,value")
@@ -422,14 +503,23 @@ def main(argv=None) -> int:
         print(f"# {name} took {time.time() - t0:.1f}s", file=sys.stderr)
     if args.json:
         import json
+        import os
         serve_groups = {g: v for g, v in collected.items()
                         if g.startswith(("serve", "kv_cache", "prefix",
-                                         "lint"))}
+                                         "traffic", "lint"))}
+        existing = {}
+        if os.path.exists(args.json):
+            try:
+                with open(args.json) as f:
+                    existing = json.load(f)
+            except (ValueError, OSError):
+                existing = {}        # unreadable artifact: rewrite fresh
         with open(args.json, "w") as f:
-            json.dump({"generated_by": "benchmarks.run --json",
-                       "benches": serve_groups}, f, indent=2, sort_keys=True)
+            json.dump(_merge_bench_json(existing, serve_groups), f,
+                      indent=2, sort_keys=True)
             f.write("\n")
-        print(f"# wrote {args.json}", file=sys.stderr)
+        print(f"# wrote {args.json} ({len(serve_groups)} group(s) "
+              f"updated)", file=sys.stderr)
     return 0
 
 

@@ -55,6 +55,11 @@ def main(argv=None):
                     help="continuous engine decode slots (default: --batch)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (paged cache pool)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: admit long prompts N tokens "
+                         "per scheduler tick, interleaved with decode "
+                         "(bit-exact; dense/moe, non-SWA; implies "
+                         "--queue).  Default: full prefill at admission")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="exact shared-prefix cache: admissions that share "
                          "cached full-page prompt prefixes point at the "
@@ -99,6 +104,7 @@ def main(argv=None):
                        page_size=args.page_size, max_slots=args.max_slots,
                        prefix_cache=args.prefix_cache,
                        prefix_cache_pages=args.prefix_cache_pages,
+                       prefill_chunk=args.prefill_chunk,
                        mesh=args.mesh)
     if args.mesh:
         from repro.distributed import sharding as shd
@@ -113,8 +119,8 @@ def main(argv=None):
     qcfg = fqt.bf16_config() if args.bf16 else None
     rng = np.random.default_rng(0)
 
-    if args.prefix_cache and not args.queue:
-        args.queue = 8          # prefix cache is a continuous-engine knob
+    if (args.prefix_cache or args.prefill_chunk) and not args.queue:
+        args.queue = 8          # continuous-engine knobs imply --queue
 
     if args.queue:
         # continuous batching: staggered arrivals through the scheduler
@@ -140,6 +146,15 @@ def main(argv=None):
         print(f"paging: {st['private_pages']} private + "
               f"{st['shared_pages']} shared + {st['demand_pages']} on-"
               f"demand pages; {st['preemptions']} preemptions")
+        ms = eng.metrics.summary()
+        print(f"latency (simulated ticks): TTFT p50 "
+              f"{ms['ttft_ticks']['p50']:.0f} / p95 "
+              f"{ms['ttft_ticks']['p95']:.0f}, TPOT p50 "
+              f"{ms['tpot_ticks']['p50']:.2f}, goodput "
+              f"{ms['goodput']:.2f}"
+              + (f"; {len(eng.scheduler.prefill_log)} prefill chunks "
+                 f"(<= {args.prefill_chunk} tok/slot/tick)"
+                 if args.prefill_chunk else ""))
         if eng.scheduler.prefix_cache is not None:
             print(f"prefix cache: hit rate "
                   f"{eng.scheduler.prefix_hit_rate:.2f}, "

@@ -557,15 +557,31 @@ class PagedKVCache:
             self.lengths.at[slot].set(jnp.asarray(plen, jnp.int32)),
             self.fmt, self.block, self.page_size)
 
-    def write_token(self, k: jax.Array, v: jax.Array) -> "PagedKVCache":
+    def write_token(self, k: jax.Array, v: jax.Array,
+                    mask: Optional[jax.Array] = None) -> "PagedKVCache":
         """Batched decode write: one (B, 1, KVH, D) token per slot at each
         slot's own length.  Inactive slots (freed mid-tick) write into the
         trash page their table rows point at — different live slots hold
-        disjoint pages, so the scatter is collision-free where it matters."""
+        disjoint pages, so the scatter is collision-free where it matters.
+
+        ``mask`` ((B,) bool, optional): slots with mask False are NOT
+        decoding this step — their write is redirected to the trash page
+        and their length does not advance.  This is how chunked prefill
+        coexists with the static batched decode program: a mid-prefill
+        slot's row points at REAL pages and its length is mid-prompt, so
+        an unmasked decode write would scribble on prompt pages (and a
+        length bump near the buffer edge could wrap ``lengths % buf``
+        back onto page 0 of the slot).  Masked slots touch nothing."""
         posl = self.lengths % self.buf           # rolling == linear < buf
         page = posl // self.page_size
         off = posl % self.page_size
         phys = jnp.take_along_axis(self.page_table, page[:, None], 1)[:, 0]
+        if mask is None:
+            step = jnp.int32(1)
+        else:
+            m = jnp.asarray(mask, bool)
+            phys = jnp.where(m, phys, TRASH_PAGE)
+            step = m.astype(jnp.int32)
         kcod, ksc = _kv_quant_any(k[:, 0], self.fmt, self.block)
         vcod, vsc = _kv_quant_any(v[:, 0], self.fmt, self.block)
         return PagedKVCache(
@@ -573,7 +589,7 @@ class PagedKVCache:
             self.k_scales.at[phys, off].set(ksc),
             self.v_codes.at[phys, off].set(vcod),
             self.v_scales.at[phys, off].set(vsc),
-            self.page_table, self.lengths + 1,
+            self.page_table, self.lengths + step,
             self.fmt, self.block, self.page_size)
 
     # ---- reads ----------------------------------------------------------
@@ -742,6 +758,7 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
                window: Optional[int] = None, chunk: int = 1024,
                positions: Optional[jax.Array] = None,
                cache=None, slot=None, plen=None, pfx=None,
+               write_mask: Optional[jax.Array] = None,
                xkv: Optional[jax.Array] = None,
                norm_eps: float = 1e-5, use_rope: bool = True):
     """Self- (or cross-, via xkv) attention with optional KV cache update.
@@ -763,6 +780,9 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
     attend THROUGH the paged cache — the shared prefix pages plus the
     just-written suffix rows, dequantized on the fly — so one compiled
     suffix program serves every (pfx, plen) warm admission.
+    ``write_mask`` ((B,) bool, batched paged decode only): slots mid-
+    chunked-prefill write to the trash page and keep their length (see
+    ``PagedKVCache.write_token``).
     """
     B, S, d = x.shape
     src = x if xkv is None else xkv
@@ -834,7 +854,7 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
                 raise ValueError("paged caches prefill one slot at a time "
                                  "(pass slot=...); batched S>1 writes are "
                                  "the lockstep caches' path")
-            new_cache = cache.write_token(k, v)
+            new_cache = cache.write_token(k, v, mask=write_mask)
             lengths = new_cache.lengths                   # post-write
             if window is not None:
                 kpos = swa_kpos(lengths, buf)

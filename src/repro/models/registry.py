@@ -193,11 +193,35 @@ def prefill_suffix(params, cfg: ModelConfig, qcfg: QuantConfig, tokens,
         f"(K/V are not a pure function of the prompt prefix)")
 
 
+def prefill_chunk(params, cfg: ModelConfig, qcfg: QuantConfig, tokens,
+                  carry, slot, off, *, seed=0):
+    """Write one FULL intermediate chunk (1, C) of a prompt into a paged
+    slot at logical positions [off, off + C) — the chunked-prefill
+    program (no logits, no sampling; the final chunk goes through
+    ``prefill_suffix``).  Returns the updated carry.
+
+    Dense/moe transformers only, same reasoning as ``prefill_suffix``:
+    the chunk attends THROUGH the quantized paged cache, so its rows are
+    a pure function of the prompt prefix and chunking is exact."""
+    if cfg.family in ("dense", "moe"):
+        return transformer.prefill_chunk(params, cfg, qcfg, tokens, carry,
+                                         slot, off, seed=seed)
+    raise NotImplementedError(
+        f"prefill_chunk: family {cfg.family!r} cannot prefill through the "
+        f"paged cache (K/V are not a pure function of the prompt prefix)")
+
+
 def decode_step(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, carry,
-                *, seed=0):
+                *, seed=0, write_mask=None):
+    """``write_mask`` ((B,) bool): paged dense/moe decode only — slots
+    mid-chunked-prefill write to the trash page and keep their length."""
     if cfg.family in _TRANSFORMER_FAMILIES:
         return transformer.decode_step(params, cfg, qcfg, tokens, carry,
-                                       seed=seed)
+                                       seed=seed, write_mask=write_mask)
+    if write_mask is not None:
+        raise NotImplementedError(
+            f"decode_step write_mask: family {cfg.family!r} has no paged "
+            f"cache write to mask (chunked prefill is dense/moe only)")
     if cfg.family == "hybrid":
         return mamba2.decode_step(params, cfg, qcfg, tokens, carry, seed=seed)
     if cfg.family == "ssm":

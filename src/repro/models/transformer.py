@@ -55,7 +55,8 @@ def init(cfg: ModelConfig, key, dtype=jnp.bfloat16):
 
 
 def _layer_apply(cfg: ModelConfig, lp, x, seed, *, positions, cache,
-                 qcfg: QuantConfig, slot=None, plen=None, pfx=None):
+                 qcfg: QuantConfig, slot=None, plen=None, pfx=None,
+                 write_mask=None):
     ctx = QCtx(qcfg, seed)
     x = constrain(x, "res")
     h, new_cache = attn_apply(
@@ -63,7 +64,8 @@ def _layer_apply(cfg: ModelConfig, lp, x, seed, *, positions, cache,
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
         rope_theta=cfg.rope_theta, window=cfg.sliding_window,
         chunk=cfg.attn_chunk, positions=positions, cache=cache,
-        slot=slot, plen=plen, pfx=pfx, norm_eps=cfg.norm_eps)
+        slot=slot, plen=plen, pfx=pfx, write_mask=write_mask,
+        norm_eps=cfg.norm_eps)
     x = x + h
     hin = rmsnorm(x, lp["ln2"], cfg.norm_eps)
     if cfg.n_experts:
@@ -78,7 +80,7 @@ def _layer_apply(cfg: ModelConfig, lp, x, seed, *, positions, cache,
 
 def apply_layers(params, cfg: ModelConfig, qcfg: QuantConfig, x, seed, *,
                  positions=None, caches=None, remat: bool = False,
-                 slot=None, plen=None, pfx=None):
+                 slot=None, plen=None, pfx=None, write_mask=None):
     """Scan the stacked layers.  Returns (x, new_caches, aux_loss_sum)."""
     L = cfg.n_layers
     seeds = jnp.asarray(seed, jnp.uint32) + jnp.arange(
@@ -88,7 +90,7 @@ def apply_layers(params, cfg: ModelConfig, qcfg: QuantConfig, x, seed, *,
         lp, s, c = per_layer
         y, nc, aux = _layer_apply(cfg, lp, x, s, positions=positions,
                                   cache=c, qcfg=qcfg, slot=slot, plen=plen,
-                                  pfx=pfx)
+                                  pfx=pfx, write_mask=write_mask)
         return y, (nc, aux)
 
     if remat:
@@ -193,6 +195,32 @@ def prefill_suffix(params, cfg: ModelConfig, qcfg: QuantConfig, tokens,
     return _logits(params, cfg, qcfg, x, seed)[:, 0], new_caches
 
 
+def prefill_chunk(params, cfg: ModelConfig, qcfg: QuantConfig, tokens,
+                  caches, slot, off, *, seed=0):
+    """Write ONE full intermediate chunk of a prompt into a paged slot.
+
+    ``tokens`` is a (1, C) chunk of the prompt covering logical positions
+    [off, off + C) — always exactly full (the FINAL, possibly short chunk
+    goes through ``prefill_suffix``, which also samples the first token).
+    ``off`` is a dynamic scalar, so one compiled program serves every
+    chunk of every admission.  Reuses the quantize-then-attend suffix
+    machinery (write the chunk's quantized K/V rows, then attend through
+    the paged cache over [0, off + C)), so each token's hidden state is a
+    pure function of the quantized rows before it — the chunk partition
+    cannot change any value, and chunked prefill is BIT-identical to an
+    unchunked suffix prefill.  No lm_head / no sampling: intermediate
+    chunks emit nothing.  Returns the updated caches only."""
+    x = params["embed"][tokens]
+    C = x.shape[1]
+    off = jnp.asarray(off, jnp.int32)
+    positions = off + jnp.arange(C, dtype=jnp.int32)
+    _, new_caches, _ = apply_layers(params, cfg, qcfg, x, seed,
+                                    positions=positions, caches=caches,
+                                    remat=False, slot=slot, plen=off + C,
+                                    pfx=off)
+    return new_caches
+
+
 def prefill(params, cfg, qcfg, tokens, caches, *, seed=0,
             prefix_embeds=None):
     """Run the prompt through the model, filling caches; returns
@@ -208,12 +236,16 @@ def prefill(params, cfg, qcfg, tokens, caches, *, seed=0,
 
 
 def decode_step(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, caches,
-                *, seed=0):
-    """One new token per sequence.  tokens: (B, 1).  Returns (logits, caches)."""
+                *, seed=0, write_mask=None):
+    """One new token per sequence.  tokens: (B, 1).  Returns (logits, caches).
+
+    ``write_mask`` ((B,) bool, paged caches only): slots mid-chunked-
+    prefill write to the trash page and keep their length — see
+    ``PagedKVCache.write_token``."""
     x = params["embed"][tokens]
     x, new_caches, _ = apply_layers(params, cfg, qcfg, x, seed,
                                     positions=None, caches=caches,
-                                    remat=False)
+                                    remat=False, write_mask=write_mask)
     x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
     return _logits(params, cfg, qcfg, x, seed), new_caches
 

@@ -1,6 +1,10 @@
 from repro.serve import packing
 from repro.serve.engine import (ContinuousEngine, Engine, ServeConfig,
                                 serve_step_fn)
+from repro.serve.metrics import MetricsRecorder, percentile
 from repro.serve.packing import pack_model_params, weight_store_bytes
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import PagePool, Request, Scheduler
+from repro.serve.workload import (TenantSpec, WorkloadConfig,
+                                  WorkloadEvent, as_requests,
+                                  generate_workload, trace_fingerprint)

@@ -14,17 +14,22 @@ Two engines share the packed-weight/packed-cache machinery:
   * ``ContinuousEngine`` — vLLM-style CONTINUOUS batching over a paged
     NVFP4 KV cache.  Request lifecycle (admission queue, per-slot lengths,
     slot free/reuse on EOS/max_len, demand-driven paging + preemption,
-    the exact shared-prefix cache) lives in ``serve/scheduler.py`` on the
-    host; the device side is EXACTLY THREE jitted programs with static
-    shapes —
+    abort/timeout cancellation, the exact shared-prefix cache) lives in
+    ``serve/scheduler.py`` on the host; the device side is EXACTLY FOUR
+    jitted programs with static shapes —
 
         prefill-into-slot : right-padded (1, prefill_len) prompt into one
                             slot's pages (dynamic slot/plen operands)
         prefill-suffix    : warm shared-prefix admission — only the
                             prompt SUFFIX (dynamic pfx/plen/slot), the
                             prefix pages are shared from the prefix cache
+        prefill-chunk     : one FULL intermediate chunk of a long prompt
+                            (chunked prefill; dynamic slot/offset
+                            operands, no sampling — the final short
+                            chunk reuses prefill-suffix)
         batched decode    : one token for every slot, per-slot
-                            kv_len/q_offset VECTOR operands
+                            kv_len/q_offset VECTOR operands + an active
+                            mask freezing mid-prefill slots
 
     so admitting a queued request into a freed slot never recompiles.
     Host sync happens once per scheduler TICK (``decode_chunk`` steps),
@@ -55,6 +60,7 @@ from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.models.layers import TRASH_PAGE, PagedKVCache
 from repro.serve import packing
+from repro.serve.metrics import MetricsRecorder
 from repro.serve.scheduler import Request, Scheduler
 
 
@@ -82,6 +88,14 @@ class ServeConfig:
                                        # from the submitted trace)
     decode_chunk: int = 8         # decode steps per scheduler tick — the
                                   # host-sync cadence for BOTH engines
+    # chunked prefill: a prompt enters its slot ``prefill_chunk`` tokens
+    # per scheduler TICK (a fourth jitted program with dynamic offset
+    # operands), interleaved with decode — one long prompt never stalls a
+    # decode tick by more than one chunk.  Each chunk attends THROUGH the
+    # quantized paged cache (the prefix-cache suffix machinery), so
+    # chunking is bit-exact for every kv_cache_format.  Dense/moe,
+    # linear (non-SWA) caches only.  None = full prefill at admission.
+    prefill_chunk: Optional[int] = None
     # exact shared-prefix cache (serve/prefix_cache.py): admissions whose
     # prompt shares cached full pages point their page-table rows at the
     # shared physical pages and prefill only the suffix.  Dense/moe,
@@ -274,11 +288,24 @@ class ContinuousEngine:
             raise NotImplementedError(
                 "prefix_cache needs prompt-pure K/V and a linear cache: "
                 "dense/moe families without a sliding window")
+        if scfg.prefill_chunk is not None:
+            if cfg.family not in ("dense", "moe") or \
+                    cfg.sliding_window is not None:
+                raise NotImplementedError(
+                    "prefill_chunk needs prompt-pure K/V and a linear "
+                    "cache: dense/moe families without a sliding window "
+                    "(chunks attend THROUGH the quantized paged cache)")
+            if not 1 <= scfg.prefill_chunk <= self.slot_buf:
+                raise ValueError(
+                    f"prefill_chunk {scfg.prefill_chunk} out of range "
+                    f"[1, {self.slot_buf}]")
         self._root = jax.random.PRNGKey(scfg.seed)
 
         self._prefill = jax.jit(self._prefill_impl, donate_argnums=(4,))
         self._prefill_sfx = jax.jit(self._prefill_suffix_impl,
                                     donate_argnums=(5,))
+        self._prefill_chk = jax.jit(self._prefill_chunk_impl,
+                                    donate_argnums=(3,))
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
 
     def _replicate(self, *xs):
@@ -326,12 +353,30 @@ class ContinuousEngine:
         tok, margin = self._pin(tok, _greedy_margin(logits)[0])
         return tok, margin, shd.constrain_serve_cache(carry, self.mesh)
 
-    def _decode_impl(self, tokens, carry, rids, steps):
+    def _prefill_chunk_impl(self, tokens, slot, off, carry):
+        """Chunked prefill, intermediate chunk: write one FULL
+        (1, prefill_chunk) slice of a long prompt into a slot's pages at
+        positions [off, off + C) — the fourth jitted program (dynamic
+        slot/off operands; no logits, no sampling — the final, possibly
+        short chunk reuses the suffix program and samples there)."""
+        carry = registry.prefill_chunk(self.params, self.cfg, self.qcfg,
+                                       tokens, carry, slot, off)
+        return shd.constrain_serve_cache(carry, self.mesh)
+
+    def _decode_impl(self, tokens, carry, rids, steps, active):
         """One token for every slot; per-slot kv_len/q_offset ride inside
-        the paged caches (``PagedKVCache.lengths``) as vector state."""
+        the paged caches (``PagedKVCache.lengths``) as vector state.
+
+        ``active`` ((n_slots,) bool): in chunked-prefill mode, slots that
+        are NOT decoding this tick (mid-prefill or empty) write to the
+        trash page with frozen lengths, so a decode tick can never
+        corrupt a partially-prefilled slot's pages.  Without chunked
+        prefill the operand is dropped at trace time (write_mask=None),
+        keeping the non-chunked program byte-identical to before."""
+        mask = active if self.scfg.prefill_chunk is not None else None
         logits, carry = registry.decode_step(self.params, self.cfg,
                                              self.qcfg, tokens[:, None],
-                                             carry)
+                                             carry, write_mask=mask)
         lg = logits[:, -1]
         if self.scfg.temperature <= 0.0:
             nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
@@ -352,6 +397,10 @@ class ContinuousEngine:
     @property
     def prefill_suffix_compiles(self) -> int:
         return self._prefill_sfx._cache_size()
+
+    @property
+    def chunk_compiles(self) -> int:
+        return self._prefill_chk._cache_size()
 
     @property
     def decode_compiles(self) -> int:
@@ -400,28 +449,62 @@ class ContinuousEngine:
         teacher-forcing streams — the engine FEEDS the forced tokens but
         records its own picks (and greedy margins, ``self.margins``); used
         by the token-identity tests to compare across near-tied logits.
+
+        Aborted/timed-out requests never appear in the result dict; their
+        partial streams live in ``self.scheduler.cancelled``.  Lifecycle
+        timestamps (simulated ticks: TTFT/TPOT/goodput/queue depth) land
+        in ``self.metrics`` (serve/metrics.py) — one recorder per run.
+
+        With ``scfg.prefix_cache`` on, the scheduler (page pool + radix
+        cache) AND the device carry (quantized prefix pages) PERSIST
+        across run() calls, so tenants keep warm prefixes between traces;
+        results/cancellations/metrics/margins are per-run.
         """
         scfg = self.scfg
         forced = forced or {}
         extras = extras or {}
-        sched = Scheduler(self.n_slots, scfg.max_len, scfg.page_size,
-                          total_pages=scfg.total_pages,
-                          slot_pages=self.n_pages_slot,
-                          prefix_cache=scfg.prefix_cache,
-                          prefix_cache_pages=scfg.prefix_cache_pages)
+        chunked = scfg.prefill_chunk is not None
+        sched = self.scheduler if (scfg.prefix_cache and
+                                   getattr(self, "scheduler", None)
+                                   is not None) else None
+        if sched is None:
+            sched = Scheduler(self.n_slots, scfg.max_len, scfg.page_size,
+                              total_pages=scfg.total_pages,
+                              slot_pages=self.n_pages_slot,
+                              prefix_cache=scfg.prefix_cache,
+                              prefix_cache_pages=scfg.prefix_cache_pages,
+                              prefill_chunk=scfg.prefill_chunk)
+            carry = registry.make_decode_state(
+                self.cfg, self.n_slots, scfg.max_len,
+                kv_cache_format=scfg.kv_cache_format,
+                page_size=scfg.page_size, total_pages=sched.total_pages)
+            # KV page pools shard their heads axis over the TP axis;
+            # page-table rows / lengths stay replicated (host mutates them
+            # identically everywhere).  Identity on the 1-device mesh.
+            carry = shd.place_serve_cache(carry, self.mesh)
+        else:
+            carry = self._last_carry    # warm prefix pages persist
+            sched.results = {}
+            sched.cancelled = {}
         self.scheduler = sched
         for r in requests:
             sched.submit(r)
-        prefill_pad = self._derive_prefill_len(requests)
+        met = MetricsRecorder()
+        self.metrics = met
+        for r in requests:
+            met.submitted(r.rid, r.arrival, deadline=r.deadline)
+        if chunked:
+            # the chunk/suffix programs have static width prefill_chunk;
+            # prompts stream in over ticks, so only slot capacity caps them
+            prefill_pad = scfg.prefill_chunk
+            long = [r.rid for r in requests
+                    if len(r.prompt) > self.slot_buf]
+            if long:
+                raise ValueError(f"requests {long}: prompt exceeds the "
+                                 f"slot capacity {self.slot_buf}")
+        else:
+            prefill_pad = self._derive_prefill_len(requests)
 
-        carry = registry.make_decode_state(
-            self.cfg, self.n_slots, scfg.max_len,
-            kv_cache_format=scfg.kv_cache_format,
-            page_size=scfg.page_size, total_pages=sched.total_pages)
-        # KV page pools shard their heads axis over the TP axis; page-table
-        # rows / lengths stay replicated (host mutates them identically
-        # everywhere).  Identity on the default 1-device mesh.
-        carry = shd.place_serve_cache(carry, self.mesh)
         tokens, rids, steps = self._replicate(
             jnp.zeros((self.n_slots,), jnp.int32),
             jnp.zeros((self.n_slots,), jnp.int32),
@@ -436,12 +519,29 @@ class ContinuousEngine:
 
         tick = 0
         while sched.has_work():
+            # -- lifecycle: hard aborts/timeouts due NOW fire before any
+            # admission or prefill/decode work is issued this tick
+            for slot, rid, stage, reason in sched.expire(tick):
+                met.cancelled(rid, tick, stage, reason)
+                if slot is not None:        # was on-device: park its row
+                    carry = self._set_page_row(carry, slot, trash_row)
+                    self.margins.pop(rid, None)
+                    slot_rid[slot] = None
+                    pending.pop(slot, None)
+                    slot_fed.pop(slot, None)
+
             # -- admissions (host): pages + slot, then ONE prefill program
             # (warm shared-prefix admissions run the SUFFIX program; a
             # later admission in the same batch may share pages a prior
-            # one writes, so prefills run strictly in placed order)
+            # one writes, so prefills run strictly in placed order).
+            # Chunked mode defers ALL prompt writes to prefill_work below.
             for slot, req, row, pfx in sched.admit(tick):
                 carry = self._set_page_row(carry, slot, row)
+                slot_rid[slot] = req.rid
+                rids = rids.at[slot].set(req.rid)
+                met.admitted(req.rid, tick)
+                if chunked:
+                    continue
                 padded = np.zeros((1, prefill_pad), np.int32)
                 sfx = np.asarray(req.prompt[pfx:], np.int32)
                 padded[0, :len(sfx)] = sfx
@@ -460,8 +560,6 @@ class ContinuousEngine:
                         jnp.asarray(padded), jnp.asarray(len(req.prompt)),
                         jnp.asarray(slot), jnp.asarray(req.rid), carry,
                         extras.get(req.rid, {}))
-                slot_rid[slot] = req.rid
-                rids = rids.at[slot].set(req.rid)
                 steps = steps.at[slot].set(1)
                 pending[slot] = (tok, margin)
                 if req.rid in forced:
@@ -470,8 +568,38 @@ class ContinuousEngine:
                 else:
                     tokens = tokens.at[slot].set(tok)
 
-            # -- decode tick: no host transfer inside the loop
-            active = sched.active_slots()
+            # -- chunked prefill: at most ONE chunk per mid-prefill slot
+            # per tick, interleaved with this tick's decode.  Chunks
+            # attend THROUGH the slot's quantized pages, so the final
+            # (short) chunk — which reuses the suffix program, writes the
+            # tail rows and samples the first token — produces streams
+            # BIT-IDENTICAL to an unchunked admission of the same prompt.
+            for slot, req, start, clen, last in sched.prefill_work(tick):
+                if not last:
+                    chunk = np.asarray(req.prompt[start:start + clen],
+                                       np.int32)[None]
+                    carry = self._prefill_chk(
+                        jnp.asarray(chunk), jnp.asarray(slot),
+                        jnp.asarray(start), carry)
+                    continue
+                padded = np.zeros((1, prefill_pad), np.int32)
+                padded[0, :clen] = req.prompt[start:]
+                tok, margin, carry = self._prefill_sfx(
+                    jnp.asarray(padded), jnp.asarray(len(req.prompt)),
+                    jnp.asarray(start), jnp.asarray(slot),
+                    jnp.asarray(req.rid), carry)
+                steps = steps.at[slot].set(1)
+                pending[slot] = (tok, margin)
+                if req.rid in forced:
+                    slot_fed[slot] = 0
+                    tokens = tokens.at[slot].set(int(forced[req.rid][0]))
+                else:
+                    tokens = tokens.at[slot].set(tok)
+
+            # -- decode tick: no host transfer inside the loop.  Slots
+            # still mid-prefill neither emit nor commit (their cache
+            # writes are masked to the trash page with frozen lengths).
+            active = sched.decoding_slots()
             T = sched.tick_steps(scfg.decode_chunk,
                                  {s: 1 for s in pending})
             # demand-driven paging: grow rows for this tick's writes; on
@@ -487,10 +615,14 @@ class ContinuousEngine:
                 pending.pop(slot, None)
                 slot_fed.pop(slot, None)
             active = [s for s in active if s not in preempted]
+            amask = np.zeros((self.n_slots,), bool)
+            amask[active] = True
+            amask = self._replicate(jnp.asarray(amask))
             picks, margs = [], []
             for _ in range(T):
                 nxt, margin, steps, carry = self._decode(tokens, carry,
-                                                         rids, steps)
+                                                         rids, steps,
+                                                         amask)
                 picks.append(nxt)
                 margs.append(margin)
                 tokens = nxt
@@ -514,6 +646,7 @@ class ContinuousEngine:
                 rid = slot_rid[slot]
                 toks, margins = [], self.margins.setdefault(rid, [])
                 if slot in firsts:
+                    met.first_token(rid, tick)
                     toks.append(int(firsts[slot][0]))
                     margins.append(float(firsts[slot][1]))
                 toks += [int(t) for t in em[:, slot]]
@@ -523,12 +656,16 @@ class ContinuousEngine:
                     carry = self._set_page_row(carry, slot, trash_row)
                     slot_rid[slot] = None
                     slot_fed.pop(slot, None)
+                    met.finished(rid, tick, len(sched.results[rid]))
             sched.count_tick(T, n_active=len(active))
+            met.tick(queue_depth=len(sched.queue), n_active=len(active))
             tick += 1
 
         self.margins = {rid: np.asarray(ms, np.float32)
                         for rid, ms in self.margins.items()}
-        self._last_carry = carry    # kept for page-table invariant tests
+        met.set_counters(sched.stats)
+        self._last_carry = carry    # page-table invariant tests + the
+                                    # prefix-cache persistence above
         return dict(sched.results)
 
     def generate(self, prompts: List[np.ndarray],

@@ -1,0 +1,149 @@
+"""Simulated-clock serving metrics: TTFT/TPOT/goodput in scheduler TICKS.
+
+Every timestamp in this module is a scheduler tick index — there is no
+wall clock anywhere, so recorded trajectories are deterministic and
+byte-comparable across runs/machines (the same discipline as the rest of
+the serve layer).  ``ContinuousEngine.run`` drives a ``MetricsRecorder``
+through the request lifecycle:
+
+    submitted  -> request entered the trace (arrival tick, optional
+                  deadline)
+    admitted   -> first placed into a device slot
+    first_token-> the request's FIRST token reached the host (commit);
+                  preemption replays the identical stream, so the first
+                  emission is the one the client saw — re-admissions
+                  never move it
+    finished   -> all tokens committed (EOS or max_new)
+    cancelled  -> hard abort/timeout (stage: queued/prefill/decode)
+
+Definitions (all in ticks):
+
+    TTFT     = first_token_tick - arrival        (time to first token)
+    TPOT     = (finish_tick - first_token_tick) / max(1, n_tokens - 1)
+               (mean time per output token after the first)
+    goodput  = completions at-or-before their deadline / submitted
+               (requests without a deadline count as on-time when done)
+
+Percentiles are NEAREST-RANK (no interpolation): deterministic, and a
+reported p99 is always a latency some request actually experienced.
+
+Host-side and numpy-only, like the scheduler — usable from
+``tools/check_env.py --traffic`` without touching the accelerator stack.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+PERCENTILES = (50, 95, 99)
+
+
+def percentile(values: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile: the ceil(p/100 * n)-th smallest value.
+    Returns NaN on an empty sample (JSON-safe via ``summary``)."""
+    v = sorted(float(x) for x in values)
+    if not v:
+        return float("nan")
+    if not (0 < p <= 100):
+        raise ValueError(f"percentile p must be in (0, 100], got {p}")
+    idx = int(np.ceil(p / 100.0 * len(v))) - 1
+    return v[max(0, min(idx, len(v) - 1))]
+
+
+def percentile_summary(values: Sequence[float],
+                       pcts: Sequence[int] = PERCENTILES) -> Dict[str, float]:
+    """{p50: ..., p95: ..., p99: ..., mean, max, n} for one metric."""
+    out = {f"p{p}": percentile(values, p) for p in pcts}
+    out["mean"] = float(np.mean(values)) if len(values) else float("nan")
+    out["max"] = float(max(values)) if len(values) else float("nan")
+    out["n"] = len(values)
+    return out
+
+
+class MetricsRecorder:
+    """Per-request lifecycle timestamps + per-tick gauges, summarized to
+    percentile dictionaries.  One recorder per ``run()`` trace."""
+
+    def __init__(self):
+        self.requests: Dict[int, dict] = {}
+        self.queue_depth: List[int] = []       # gauge, one entry per tick
+        self.active_depth: List[int] = []      # decoding slots per tick
+        self.counters: Dict[str, int] = {}     # scheduler stats snapshot
+
+    # ---- lifecycle events ----------------------------------------------
+
+    def submitted(self, rid: int, arrival: int,
+                  deadline: Optional[int] = None) -> None:
+        self.requests[rid] = {"arrival": int(arrival),
+                              "deadline": deadline,
+                              "admitted": None, "first": None,
+                              "done": None, "ntokens": 0,
+                              "cancelled": None}
+
+    def admitted(self, rid: int, tick: int) -> None:
+        r = self.requests[rid]
+        if r["admitted"] is None:       # re-admission after preemption
+            r["admitted"] = int(tick)   # keeps the FIRST placement tick
+
+    def first_token(self, rid: int, tick: int) -> None:
+        r = self.requests[rid]
+        if r["first"] is None:          # preemption replays the identical
+            r["first"] = int(tick)      # stream; the first emission stands
+
+    def finished(self, rid: int, tick: int, ntokens: int) -> None:
+        r = self.requests[rid]
+        r["done"] = int(tick)
+        r["ntokens"] = int(ntokens)
+
+    def cancelled(self, rid: int, tick: int, stage: str,
+                  reason: str) -> None:
+        self.requests[rid]["cancelled"] = {"tick": int(tick),
+                                           "stage": stage,
+                                           "reason": reason}
+
+    # ---- per-tick gauges / counters ------------------------------------
+
+    def tick(self, queue_depth: int, n_active: int) -> None:
+        self.queue_depth.append(int(queue_depth))
+        self.active_depth.append(int(n_active))
+
+    def set_counters(self, stats: Dict[str, int]) -> None:
+        self.counters = {k: int(v) for k, v in stats.items()}
+
+    # ---- summaries -----------------------------------------------------
+
+    def ttfts(self) -> List[int]:
+        return [r["first"] - r["arrival"] for r in self.requests.values()
+                if r["first"] is not None]
+
+    def tpots(self) -> List[float]:
+        return [(r["done"] - r["first"]) / max(1, r["ntokens"] - 1)
+                for r in self.requests.values()
+                if r["done"] is not None and r["first"] is not None]
+
+    def goodput(self) -> float:
+        if not self.requests:
+            return 0.0
+        good = sum(1 for r in self.requests.values()
+                   if r["done"] is not None
+                   and (r["deadline"] is None
+                        or r["done"] <= r["deadline"]))
+        return good / len(self.requests)
+
+    def summary(self) -> dict:
+        done = [r for r in self.requests.values() if r["done"] is not None]
+        canc = [r for r in self.requests.values()
+                if r["cancelled"] is not None]
+        return {
+            "ticks": len(self.queue_depth),
+            "submitted": len(self.requests),
+            "completed": len(done),
+            "cancelled": len(canc),
+            "goodput": self.goodput(),
+            "ttft_ticks": percentile_summary(self.ttfts()),
+            "tpot_ticks": percentile_summary(self.tpots()),
+            "queue_depth": percentile_summary(self.queue_depth),
+            "active_slots": percentile_summary(self.active_depth),
+            "counters": dict(self.counters),
+        }

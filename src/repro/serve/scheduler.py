@@ -42,12 +42,24 @@ from repro.serve.prefix_cache import PrefixCache
 
 @dataclasses.dataclass
 class Request:
-    """One generation request.  ``arrival`` is a scheduler tick index, so
-    traces are deterministic (no wall-clock anywhere)."""
+    """One generation request.  Every time field is a scheduler TICK
+    index, so traces are deterministic (no wall-clock anywhere).
+
+      * ``deadline``: soft completion SLO (absolute tick) — goodput
+        metrics count completions at or before it; nothing is cancelled;
+      * ``abort_at``: hard client abort — the request is cancelled at
+        this tick whatever stage it is in (queued, mid-chunked-prefill,
+        decoding, preempted-and-requeued);
+      * ``timeout``: hard cancel ``timeout`` ticks after ``arrival`` if
+        not finished by then.
+    """
     rid: int
     prompt: np.ndarray
     max_new: int = 32
     arrival: int = 0
+    deadline: Optional[int] = None
+    abort_at: Optional[int] = None
+    timeout: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -59,6 +71,12 @@ class SlotState:
     tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     written: int = 0        # cache rows written so far (prefill + decode)
+    prefill_pos: int = 0    # prompt rows already in the cache (chunked
+                            # prefill; == plen once prefill is complete)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefill_pos < self.plen
 
     @property
     def remaining(self) -> int:
@@ -151,10 +169,19 @@ class Scheduler:
                  total_pages: Optional[int] = None,
                  slot_pages: Optional[int] = None,
                  prefix_cache: bool = False,
-                 prefix_cache_pages: Optional[int] = None):
+                 prefix_cache_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         self.n_slots = n_slots
         self.max_len = max_len
         self.page_size = page_size
+        # chunked prefill: a prompt enters the cache ``prefill_chunk``
+        # tokens per TICK (``prefill_work``) instead of all at once at
+        # admission, so one long prompt never stalls a decode tick by
+        # more than one chunk.  None = prefill everything at admission.
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, "
+                             f"got {prefill_chunk}")
+        self.prefill_chunk = prefill_chunk
         # page-table row width: SWA caches roll within min(max_len, window)
         # logical tokens, so the engine passes its (smaller) row width in
         self.n_pages_slot = slot_pages or -(-max_len // page_size)
@@ -177,13 +204,22 @@ class Scheduler:
         self._reqs: Dict[int, Request] = {}        # slot -> live Request
         self._adm_seq: Dict[int, int] = {}         # slot -> admission seq
         self._seq = 0
+        # chunked mode: prefix-cache insertion is DEFERRED until a slot's
+        # final chunk is issued (its pages hold nothing shareable before)
+        self._pending_insert: Dict[int, np.ndarray] = {}
         self.results: Dict[int, np.ndarray] = {}
+        # rid -> {"reason", "stage", "tokens"} for aborted/timed-out
+        # requests (they never appear in ``results``)
+        self.cancelled: Dict[int, dict] = {}
+        # (tick, slot, rid, chunk_tokens) per issued prefill chunk — the
+        # per-tick-per-slot chunk-bound evidence the tests assert on
+        self.prefill_log: List[Tuple[int, int, int, int]] = []
         # counters for the throughput bench / tests
         self.stats = {"admitted": 0, "completed": 0, "decode_steps": 0,
                       "slot_steps": 0, "active_slot_steps": 0,
                       "prefilled_tokens": 0, "prefix_tokens_skipped": 0,
                       "shared_pages": 0, "private_pages": 0,
-                      "demand_pages": 0, "preemptions": 0}
+                      "demand_pages": 0, "preemptions": 0, "cancelled": 0}
 
     # ---- submission / admission -----------------------------------------
 
@@ -251,7 +287,9 @@ class Scheduler:
                 self.pool.free(shared)          # unpin; retry next tick
                 break
             self.queue.popleft()
-            st = SlotState(req.rid, plen, req.max_new, written=plen)
+            st = SlotState(req.rid, plen, req.max_new, written=plen,
+                           prefill_pos=plen if self.prefill_chunk is None
+                           else pfx)
             self.slots[slot] = st
             self._reqs[slot] = req
             self._adm_seq[slot] = self._seq
@@ -264,11 +302,17 @@ class Scheduler:
             self._rows[slot] = row
             if self.prefix_cache is not None:
                 self.prefix_cache.count(len(shared))
-                # register this prompt's full pages for future admissions
-                # (contents land during this admission's prefill, before
-                # any later prefill could read them — admissions are
-                # prefilled in ``placed`` order)
-                self.prefix_cache.insert(req.prompt, row)
+                if self.prefill_chunk is None:
+                    # register this prompt's full pages for future
+                    # admissions (contents land during this admission's
+                    # prefill, before any later prefill could read them —
+                    # admissions are prefilled in ``placed`` order)
+                    self.prefix_cache.insert(req.prompt, row)
+                else:
+                    # chunked: pages fill over several ticks — insertion
+                    # is deferred to the final chunk (``prefill_work``)
+                    # so a later admission can never share unwritten pages
+                    self._pending_insert[slot] = req.prompt
             self.stats["admitted"] += 1
             self.stats["prefilled_tokens"] += plen - pfx
             self.stats["prefix_tokens_skipped"] += pfx
@@ -276,6 +320,37 @@ class Scheduler:
             self.stats["private_pages"] += len(priv)
             placed.append((slot, req, row.copy(), pfx))
         return placed
+
+    # ---- chunked prefill --------------------------------------------------
+
+    def prefill_work(self, tick: int
+                     ) -> List[Tuple[int, Request, int, int, bool]]:
+        """One prefill chunk per mid-prefill slot for this tick (chunked
+        mode only).  Returns [(slot, request, start, clen, last)]: the
+        engine writes prompt[start : start + clen] into the slot's pages
+        (positions [start, start + clen)); ``last`` marks the final chunk
+        (short, samples the first token via the suffix program).  At most
+        ``prefill_chunk`` prompt tokens enter the cache per slot per tick
+        — ``prefill_log`` records (tick, slot, rid, clen) as evidence."""
+        if self.prefill_chunk is None:
+            return []
+        out = []
+        for slot in range(self.n_slots):
+            st = self.slots[slot]
+            if st is None or not st.prefilling:
+                continue
+            start = st.prefill_pos
+            last = start + self.prefill_chunk >= st.plen
+            clen = (st.plen - start) if last else self.prefill_chunk
+            st.prefill_pos = start + clen
+            if last and slot in self._pending_insert:
+                # the slot's pages are fully written once the engine runs
+                # this chunk (before any future admission could match)
+                self.prefix_cache.insert(self._pending_insert.pop(slot),
+                                         self._rows[slot])
+            self.prefill_log.append((tick, slot, st.rid, clen))
+            out.append((slot, self._reqs[slot], start, clen, last))
+        return out
 
     # ---- demand-driven page growth / preemption --------------------------
 
@@ -285,17 +360,27 @@ class Scheduler:
             return None
         return max(live, key=lambda s: self._adm_seq[s])
 
-    def _preempt(self, slot: int) -> None:
-        """Release ``slot`` and requeue its request at the FIFO head.
-        Deterministic recompute-style preemption: generated tokens are
-        discarded; per-request sampling streams (keyed by rid, step)
-        regenerate the identical stream on re-admission."""
+    def _release_slot(self, slot: int) -> Request:
+        """Return every page the slot holds to the pool and clear its
+        state (complete/preempt/cancel all funnel through here — ONE
+        place owns the page/slot conservation invariant)."""
         req = self._reqs.pop(slot)
         self.pool.free(self._held.pop(slot))
         self.slots[slot] = None
         self._rows.pop(slot)
         self._npages.pop(slot)
         self._adm_seq.pop(slot)
+        self._pending_insert.pop(slot, None)
+        return req
+
+    def _preempt(self, slot: int) -> None:
+        """Release ``slot`` and requeue its request at the FIFO head.
+        Deterministic recompute-style preemption: generated tokens are
+        discarded; per-request sampling streams (keyed by rid, step)
+        regenerate the identical stream on re-admission.  A mid-chunked-
+        prefill victim simply restarts its prefill from the (possibly
+        still cached) prefix when re-admitted."""
+        req = self._release_slot(slot)
         self.queue.appendleft(req)
         self.stats["preemptions"] += 1
 
@@ -313,6 +398,11 @@ class Scheduler:
             for slot in range(self.n_slots):
                 while self.slots[slot] is not None:
                     st = self.slots[slot]
+                    if st.prefilling:
+                        # mid-chunked-prefill: no decode write this tick
+                        # (masked in the decode program); prompt pages
+                        # were fully allocated at admission
+                        break
                     last = st.written + steps - 1       # last pos written
                     want = min(last // self.page_size + 1, self.n_pages_slot)
                     n_new = want - self._npages[slot]
@@ -338,7 +428,7 @@ class Scheduler:
                     if victim == slot:
                         break
         for st in self.slots:
-            if st is not None:
+            if st is not None and not st.prefilling:
                 st.written += max(0, steps)
         return growth, preempted
 
@@ -353,16 +443,25 @@ class Scheduler:
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
 
+    def decoding_slots(self) -> List[int]:
+        """Active slots that are past prefill — the slots that emit (and
+        commit) tokens this tick.  Mid-chunked-prefill slots are active
+        (they hold pages) but not decoding."""
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and not s.prefilling]
+
     def tick_steps(self, chunk: int,
                    pending: Optional[Dict[int, int]] = None) -> int:
         """Decode steps this tick: bounded by the tightest remaining
         budget so no active slot ever writes past its logical capacity.
         ``pending``: per-slot tokens already emitted but not yet committed
         (the engine's prefill-sampled first tokens) — they count against
-        the budget."""
+        the budget.  Mid-chunked-prefill slots emit nothing and do not
+        constrain the tick."""
         pending = pending or {}
         rem = [s.remaining - pending.get(i, 0)
-               for i, s in enumerate(self.slots) if s is not None]
+               for i, s in enumerate(self.slots)
+               if s is not None and not s.prefilling]
         return min([chunk] + rem) if rem else 0
 
     def commit(self, slot: int, toks: np.ndarray, eos_id: int) -> None:
@@ -378,13 +477,69 @@ class Scheduler:
                 st.done = True
         if st.done:
             self.results[st.rid] = np.asarray(st.tokens, np.int32)
-            self.pool.free(self._held.pop(slot))
-            self.slots[slot] = None
-            self._rows.pop(slot)
-            self._npages.pop(slot)
-            self._reqs.pop(slot)
-            self._adm_seq.pop(slot)
+            self._release_slot(slot)
             self.stats["completed"] += 1
+
+    # ---- request lifecycle: abort / timeout ------------------------------
+
+    @staticmethod
+    def _due(req: Request, tick: int) -> Optional[str]:
+        """Hard-cancel reason for ``req`` at ``tick``, or None.  Checked
+        at the START of a tick, before admission or any prefill/decode
+        work is issued for it."""
+        if req.abort_at is not None and tick >= req.abort_at:
+            return "abort"
+        if req.timeout is not None and tick >= req.arrival + req.timeout:
+            return "timeout"
+        return None
+
+    def _record_cancel(self, req: Request, reason: str, stage: str,
+                       tokens: List[int]) -> None:
+        self.cancelled[req.rid] = {"reason": reason, "stage": stage,
+                                   "tokens": np.asarray(tokens, np.int32)}
+        self.stats["cancelled"] += 1
+
+    def cancel(self, rid: int, reason: str = "abort") -> bool:
+        """Cancel request ``rid`` wherever it lives — queued (including
+        preempted-and-requeued), mid-chunked-prefill, or decoding.  Slot
+        pages funnel through ``_release_slot`` so conservation holds at
+        every stage.  Returns False if the rid is unknown/finished."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                self._record_cancel(req, reason, "queued", [])
+                return True
+        for slot, st in enumerate(self.slots):
+            if st is not None and st.rid == rid:
+                stage = "prefill" if st.prefilling else "decode"
+                req = self._release_slot(slot)
+                self._record_cancel(req, reason, stage, st.tokens)
+                return True
+        return False
+
+    def expire(self, tick: int) -> List[Tuple[Optional[int], int, str, str]]:
+        """Run all due aborts/timeouts for ``tick`` (call at tick start,
+        before ``admit``).  Returns [(slot_or_None, rid, stage, reason)] —
+        the engine uses the freed slots to reset its host-side state."""
+        out: List[Tuple[Optional[int], int, str, str]] = []
+        for req in [r for r in self.queue
+                    if self._due(r, tick) is not None]:
+            reason = self._due(req, tick)
+            self.queue.remove(req)
+            self._record_cancel(req, reason, "queued", [])
+            out.append((None, req.rid, "queued", reason))
+        for slot in range(self.n_slots):
+            st = self.slots[slot]
+            if st is None:
+                continue
+            reason = self._due(self._reqs[slot], tick)
+            if reason is None:
+                continue
+            stage = "prefill" if st.prefilling else "decode"
+            req = self._release_slot(slot)
+            self._record_cancel(req, reason, stage, st.tokens)
+            out.append((slot, req.rid, stage, reason))
+        return out
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)

@@ -54,6 +54,14 @@ def test_check_env_serve_mode(capsys):
     assert "serving scheduler invariants" in capsys.readouterr().out
 
 
+def test_check_env_traffic_mode(capsys):
+    """--traffic: host-side traffic-harness self-check (workload
+    determinism, nearest-rank percentiles, lifecycle conservation,
+    per-tick chunk budget)."""
+    assert check_env.main(["--traffic"]) == 0, capsys.readouterr().out
+    assert "traffic harness" in capsys.readouterr().out
+
+
 def test_check_env_lint_mode(capsys):
     """--lint: the fp4lint AST invariants, baseline-exact (jax-free)."""
     assert check_env.main(["--lint"]) == 0, capsys.readouterr().out
@@ -65,7 +73,7 @@ def test_check_env_all_mode(capsys):
     assert check_env.main(["--all"]) == 0, capsys.readouterr().out
     out = capsys.readouterr().out
     for marker in ("docs snippets", "serving scheduler",
-                   "mesh partition specs", "fp4lint"):
+                   "traffic harness", "mesh partition specs", "fp4lint"):
         assert marker in out, (marker, out)
 
 

@@ -3,6 +3,7 @@
   PYTHONPATH=src python tools/check_env.py          # dependency report
   PYTHONPATH=src python tools/check_env.py --docs   # docs snippet check
   PYTHONPATH=src python tools/check_env.py --serve  # scheduler invariants
+  PYTHONPATH=src python tools/check_env.py --traffic # workload/lifecycle
   PYTHONPATH=src python tools/check_env.py --mesh   # partition-spec check
   PYTHONPATH=src python tools/check_env.py --lint   # fp4lint AST invariants
   PYTHONPATH=src python tools/check_env.py --all    # every self-check
@@ -26,6 +27,13 @@ machinery: it builds a tiny refcounted page pool + prefix-cache radix
 tree and drives a full submit/admit/grow/decode/free cycle, asserting
 refcount conservation and that no page leaks.  Also tier-1
 (tests/test_docs.py).
+
+``--traffic`` is a host-side self-check of the traffic harness
+(serve/workload.py + serve/metrics.py + the scheduler's chunked-prefill
+and abort/timeout lifecycle): byte-for-byte workload determinism,
+nearest-rank percentile math, page-pool conservation under cancellation
+at every stage, and the per-tick-per-slot prefill chunk budget.  Also
+tier-1 (tests/test_docs.py).
 
 ``--mesh`` is a jax-free self-check of the sharded-serving partition-spec
 layer (repro.distributed.specs): ``--mesh tp=N`` CLI grammar, the
@@ -110,6 +118,8 @@ KWARG_GUARDS = {
     "ServeConfig": ("repro.serve", "ServeConfig"),
     "Request": ("repro.serve", "Request"),
     "PrefixCache": ("repro.serve", "PrefixCache"),
+    "WorkloadConfig": ("repro.serve", "WorkloadConfig"),
+    "TenantSpec": ("repro.serve", "TenantSpec"),
 }
 
 
@@ -340,6 +350,144 @@ def check_serve() -> int:
     return 0
 
 
+# ---- traffic harness self-check ----------------------------------------------
+
+
+def check_traffic() -> int:
+    """Host-side invariants of the traffic harness (serve/workload.py,
+    serve/metrics.py, and the scheduler's chunked-prefill/lifecycle
+    machinery — no engine, no device): workload determinism byte-for-
+    byte, nearest-rank percentile math, and the request-lifecycle state
+    machine (abort/timeout at every stage conserves the page pool; at
+    most prefill_chunk prompt tokens per slot per tick)."""
+    for base in ("src",):
+        p = os.path.join(REPO_ROOT, base)
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    import numpy as np
+    from repro.serve.metrics import MetricsRecorder, percentile
+    from repro.serve.scheduler import Request, Scheduler
+    from repro.serve.workload import (TenantSpec, WorkloadConfig,
+                                      generate_workload, trace_fingerprint)
+
+    errors = []
+
+    # workload generator: deterministic byte-for-byte, seed-sensitive
+    wcfg = WorkloadConfig(tenants=(
+        TenantSpec("chat", rate=0.6, prompt_lens=(4, 8),
+                   system_prompt_len=4, deadline_slack=16),
+        TenantSpec("batch", rate=0.3, prompt_lens=(12,), abort_prob=0.3,
+                   timeout=20, burst_every=6, burst_size=1),
+    ), ticks=20, seed=3)
+    a, b = generate_workload(wcfg), generate_workload(wcfg)
+    if trace_fingerprint(a) != trace_fingerprint(b):
+        errors.append("workload trace not deterministic for a fixed seed")
+    import dataclasses
+    c = generate_workload(dataclasses.replace(wcfg, seed=4))
+    if trace_fingerprint(a) == trace_fingerprint(c):
+        errors.append("workload trace identical across different seeds")
+    if [e.rid for e in a] != list(range(len(a))):
+        errors.append("workload rids not sequential in arrival order")
+    if any(a[i].arrival > a[i + 1].arrival for i in range(len(a) - 1)):
+        errors.append("workload events not sorted by arrival")
+
+    # nearest-rank percentile math (no interpolation, ever)
+    vals = [10, 20, 30, 40]
+    for p, want in ((50, 20), (75, 30), (95, 40), (99, 40), (100, 40)):
+        got = percentile(vals, p)
+        if got != want:
+            errors.append(f"percentile({p}) = {got}, want {want}")
+    if percentile([7], 50) != 7:
+        errors.append("percentile of a singleton is not the singleton")
+    rec = MetricsRecorder()
+    rec.submitted(0, arrival=2, deadline=10)
+    rec.admitted(0, 3)
+    rec.first_token(0, 5)
+    rec.finished(0, 9, ntokens=5)
+    rec.submitted(1, arrival=2, deadline=4)
+    rec.first_token(1, 6)
+    rec.finished(1, 8, ntokens=3)
+    s = rec.summary()
+    if s["ttft_ticks"]["p50"] != 3 or s["ttft_ticks"]["max"] != 4:
+        errors.append(f"TTFT summary wrong: {s['ttft_ticks']}")
+    if s["tpot_ticks"]["p50"] != 1.0:
+        errors.append(f"TPOT summary wrong: {s['tpot_ticks']}")
+    if s["goodput"] != 0.5:           # rid 1 finished past its deadline
+        errors.append(f"goodput {s['goodput']} != 0.5")
+
+    # lifecycle state machine: abort/timeout at every stage conserves the
+    # pool; chunked prefill never exceeds its per-tick-per-slot budget
+    def conserved(sched, what):
+        pool = sched.pool
+        if pool.free_pages + pool.pages_in_use != pool.total_pages - 1:
+            errors.append(f"{what}: pool conservation broken")
+
+    C = 3
+    sched = Scheduler(n_slots=2, max_len=32, page_size=4,
+                      prefill_chunk=C)
+    rng = np.random.default_rng(0)
+    sched.submit(Request(0, rng.integers(0, 99, 10), max_new=4))
+    sched.submit(Request(1, rng.integers(0, 99, 9), max_new=4,
+                         abort_at=1))                   # dies mid-prefill
+    sched.submit(Request(2, rng.integers(0, 99, 6), max_new=4,
+                         arrival=0, timeout=1))         # dies queued
+    tick = 0
+    while sched.has_work() and tick < 30:
+        sched.expire(tick)
+        sched.admit(tick)
+        sched.prefill_work(tick)
+        T = sched.tick_steps(4, {})
+        sched.ensure_capacity(T)
+        for s_ in list(sched.decoding_slots()):
+            if T:
+                sched.commit(s_, np.full((T,), 7), eos_id=-1)
+        conserved(sched, f"tick {tick}")
+        tick += 1
+    if sorted(sched.cancelled) != [1, 2]:
+        errors.append(f"expected rids 1,2 cancelled, got "
+                      f"{sorted(sched.cancelled)}")
+    stages = {r: v["stage"] for r, v in sched.cancelled.items()}
+    if stages.get(1) != "prefill" or stages.get(2) != "queued":
+        errors.append(f"wrong cancel stages: {stages}")
+    if 0 not in sched.results:
+        errors.append("surviving request did not complete")
+    if sched.pool.pages_in_use != 0:
+        errors.append(f"{sched.pool.pages_in_use} pages leaked after the "
+                      f"lifecycle cycle")
+    per_tick = {}
+    for t, s_, _, clen in sched.prefill_log:
+        per_tick[(t, s_)] = per_tick.get((t, s_), 0) + clen
+        if clen > C:
+            errors.append(f"chunk of {clen} tokens exceeds prefill_chunk "
+                          f"{C} at tick {t}")
+    if per_tick and max(per_tick.values()) > C:
+        errors.append("a slot prefilled more than one chunk in a tick")
+    # cancel() mid-decode on a fresh scheduler
+    sched = Scheduler(n_slots=1, max_len=32, page_size=4)
+    sched.submit(Request(5, np.arange(6), max_new=8))
+    sched.admit(0)
+    sched.ensure_capacity(2)
+    sched.commit(0, np.full((2,), 9), eos_id=-1)
+    if not sched.cancel(5, reason="abort"):
+        errors.append("cancel() did not find a decoding request")
+    if sched.cancelled[5]["stage"] != "decode" or \
+            len(sched.cancelled[5]["tokens"]) != 2:
+        errors.append(f"decode-stage cancel wrong: {sched.cancelled[5]}")
+    if sched.pool.pages_in_use != 0:
+        errors.append("cancel() leaked pages")
+    if sched.cancel(99):
+        errors.append("cancel() accepted an unknown rid")
+
+    if errors:
+        for e in errors:
+            print(f"TRAFFIC  {e}")
+        print(f"FATAL: {len(errors)} traffic harness error(s)")
+        return 1
+    print("ok       traffic harness (workload determinism, nearest-rank "
+          "percentiles, lifecycle conservation, chunk budget)")
+    return 0
+
+
 # ---- mesh spec self-check -----------------------------------------------------
 
 
@@ -505,14 +653,16 @@ def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     if "--all" in argv:
         rc = 0
-        for check in (check_docs, check_serve, check_mesh, check_lint,
-                      check_deps):
+        for check in (check_docs, check_serve, check_traffic, check_mesh,
+                      check_lint, check_deps):
             rc |= check()
         return rc
     if "--docs" in argv:
         return check_docs()
     if "--serve" in argv:
         return check_serve()
+    if "--traffic" in argv:
+        return check_traffic()
     if "--mesh" in argv:
         return check_mesh()
     if "--lint" in argv:

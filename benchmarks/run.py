@@ -211,6 +211,69 @@ def serve_throughput_bench():
     ]
 
 
+def spec_decode_bench():
+    """Speculative decoding acceptance trajectory: k in {2, 4} x draft
+    depth {1, full}.  Every speculative stream is asserted BIT-identical
+    to the non-speculative engine before its numbers are recorded — the
+    trajectory measures pure throughput movement, never token drift.
+    The accepted-tokens/tick/slot metric is the speedup story: mean > 1
+    means the verify program advances more than one committed token per
+    tick per slot (full-depth self-draft pins the ceiling at exactly k,
+    acceptance rate 1.0)."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.serve import ContinuousEngine, Request, ServeConfig
+
+    cfg = get_config("llama2-60m").smoke()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(8, 24))),
+                    max_new=int(rng.integers(8, 16)),
+                    arrival=int(i // 2))
+            for i in range(6)]
+
+    def scfg(**kw):
+        return ServeConfig(batch_size=2, max_len=96, eos_id=-1,
+                           kv_cache_format="nvfp4", page_size=16, **kw)
+
+    def run(sc):
+        eng = ContinuousEngine(cfg, params, sc)
+        res = eng.run([Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
+                               arrival=r.arrival) for r in reqs])
+        return res, eng
+
+    want, _ = run(scfg())
+    rows = []
+    for k in (2, 4):
+        for dl in (1, cfg.n_layers):
+            res, eng = run(scfg(spec_k=k, draft_layers=dl))
+            for rid in want:
+                np.testing.assert_array_equal(
+                    res[rid], want[rid],
+                    err_msg=f"spec k={k} dl={dl} drifted from sequential")
+            s = eng.metrics.summary()
+            tag = f"k{k}_draft{dl}"
+            acc = s["spec_accepted_per_tick_slot"]
+            rows += [
+                ("serve_spec", f"{tag}_accepted_per_tick_slot_mean",
+                 float(acc["mean"])),
+                ("serve_spec", f"{tag}_accepted_per_tick_slot_p50",
+                 float(acc["p50"])),
+                ("serve_spec", f"{tag}_accepted_per_tick_slot_p95",
+                 float(acc["p95"])),
+                ("serve_spec", f"{tag}_acceptance_rate_mean",
+                 float(s["spec_acceptance_rate"]["mean"])),
+                ("serve_spec", f"{tag}_verify_ticks", float(acc["n"])),
+                ("serve_spec", f"{tag}_verify_compiles",
+                 float(eng.verify_compiles)),
+            ]
+    return rows
+
+
 def prefix_cache_bench():
     """Exact shared-prefix cache: warm admissions skip the shared pages.
 
@@ -441,6 +504,7 @@ BENCHES = {
     "serve_weights": serving_weight_store,
     "kv_cache": kv_cache_bench,
     "serve_throughput": serve_throughput_bench,
+    "spec_decode": spec_decode_bench,
     "prefix_cache": prefix_cache_bench,
     "serve_sharded": serve_sharded_bench,
     "traffic": traffic_bench,
@@ -451,10 +515,12 @@ QUICK = ("table2", "fig4", "kernels", "fig5", "fig6", "serve_weights",
          "kv_cache", "serve_sharded", "traffic", "lint")
 
 # the serving artifact (BENCH_serve.json): throughput, cache bytes/token,
-# prefix-cache hit rate, sharded-weights wire accounting, the multi-
-# tenant TTFT/TPOT/goodput trajectory, lint trajectory
+# speculative acceptance trajectory, prefix-cache hit rate, sharded-
+# weights wire accounting, the multi-tenant TTFT/TPOT/goodput
+# trajectory, lint trajectory
 SERVE_BENCHES = ("serve_weights", "kv_cache", "serve_throughput",
-                 "prefix_cache", "serve_sharded", "traffic", "lint")
+                 "spec_decode", "prefix_cache", "serve_sharded", "traffic",
+                 "lint")
 
 
 def _merge_bench_json(existing: dict, new_groups: dict) -> dict:

@@ -41,14 +41,23 @@ class RoundingPolicyRule(Rule):
     Fires on any construction of an SR quant spec — ``stochastic=True``
     keyword or ``.with_rounding(True)`` — in the forward-only scopes:
     ``serve/`` and ``models/`` files (module or function scope — an SR
-    spec must not even be constructible there), ``kernels/`` decode paths
-    (module scope or a ``*decode*`` function), and anywhere as an argument
-    of a ``pack_quantize`` call (the packed weight store is RtN-only).
+    spec must not even be constructible there), ``kernels/`` serving
+    paths (module scope or a ``*decode*`` / ``*draft*`` / ``*verify*``
+    function — speculative decoding's draft and verify passes are
+    forward passes: an SR draft would desync from the RtN verify and
+    an SR verify would break bit-exactness vs sequential decode), and
+    anywhere as an argument of a ``pack_quantize`` call (the packed
+    weight store is RtN-only).
 
     FIRES (in src/repro/serve/ or src/repro/models/)::
 
         spec = BlockQuantSpec(stochastic=True)
         sr = NVFP4.with_rounding(True)
+
+    FIRES (in src/repro/kernels/)::
+
+        def verify_read(pool):
+            return dequant(pool, NVFP4.with_rounding(True))
 
     CLEAN::
 
@@ -81,7 +90,8 @@ class RoundingPolicyRule(Rule):
                 fn_stack = fn_stack + [node.name]
             if isinstance(node, ast.Call):
                 in_decode_kernel = ctx.in_kernels and (
-                    not fn_stack or "decode" in fn_stack[-1])
+                    not fn_stack or any(s in fn_stack[-1] for s in
+                                        ("decode", "draft", "verify")))
                 if self._is_sr_spec(node) and (fwd_file or in_decode_kernel):
                     where = ("serving/model" if fwd_file
                              else "kernel decode")

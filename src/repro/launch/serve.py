@@ -72,6 +72,20 @@ def main(argv=None):
                     help="with --queue: give every synthetic request the "
                          "same N-token system prompt (exercises the "
                          "prefix cache)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative decoding: a shallow self-draft "
+                         "(the first --draft-layers layers of the SAME "
+                         "packed weights) proposes tokens, one verify "
+                         "pass accepts the longest greedy-agreeing "
+                         "prefix + 1 — bit-exact vs sequential decode "
+                         "(greedy, dense/moe, non-SWA; implies --queue)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="with --spec-decode: verify block size (the "
+                         "draft proposes k-1 tokens; 1..k committed "
+                         "per slot per tick)")
+    ap.add_argument("--draft-layers", type=int, default=None,
+                    help="with --spec-decode: self-draft depth in layers "
+                         "(default: n_layers // 2)")
     ap.add_argument("--mesh", default=None,
                     help="serving mesh spec, e.g. 'tp=2' or 'dp=2,tp=4': "
                          "packed weights and KV page pools are sharded "
@@ -105,6 +119,9 @@ def main(argv=None):
                        prefix_cache=args.prefix_cache,
                        prefix_cache_pages=args.prefix_cache_pages,
                        prefill_chunk=args.prefill_chunk,
+                       spec_k=args.spec_k if args.spec_decode else None,
+                       draft_layers=(args.draft_layers
+                                     if args.spec_decode else None),
                        mesh=args.mesh)
     if args.mesh:
         from repro.distributed import sharding as shd
@@ -119,7 +136,8 @@ def main(argv=None):
     qcfg = fqt.bf16_config() if args.bf16 else None
     rng = np.random.default_rng(0)
 
-    if (args.prefix_cache or args.prefill_chunk) and not args.queue:
+    if (args.prefix_cache or args.prefill_chunk or args.spec_decode) \
+            and not args.queue:
         args.queue = 8          # continuous-engine knobs imply --queue
 
     if args.queue:
@@ -142,7 +160,7 @@ def main(argv=None):
               f"{eng.scheduler.slot_utilization:.2f}; compiles: "
               f"prefill {eng.prefill_compiles}+"
               f"{eng.prefill_suffix_compiles}, decode "
-              f"{eng.decode_compiles})")
+              f"{eng.decode_compiles}, verify {eng.verify_compiles})")
         print(f"paging: {st['private_pages']} private + "
               f"{st['shared_pages']} shared + {st['demand_pages']} on-"
               f"demand pages; {st['preemptions']} preemptions")
@@ -160,6 +178,15 @@ def main(argv=None):
                   f"{eng.scheduler.prefix_hit_rate:.2f}, "
                   f"{st['prefix_tokens_skipped']} prefill tokens skipped, "
                   f"{st['prefilled_tokens']} prefilled")
+        if args.spec_decode and "spec_accepted_per_tick_slot" in ms:
+            acc, rate = (ms["spec_accepted_per_tick_slot"],
+                         ms["spec_acceptance_rate"])
+            print(f"speculative (k={args.spec_k}, draft "
+                  f"{eng.draft_layers}/{cfg.n_layers} layers): "
+                  f"{acc['mean']:.2f} accepted tokens/tick/slot "
+                  f"(p50 {acc['p50']:.0f}, p95 {acc['p95']:.0f}), "
+                  f"acceptance rate {rate['mean']:.2f} over "
+                  f"{acc['n']} verify samples")
         for rid in sorted(res)[:4]:
             print(f"req {rid}: {res[rid][:16].tolist()} ...")
         return

@@ -592,6 +592,64 @@ class PagedKVCache:
             self.page_table, self.lengths + step,
             self.fmt, self.block, self.page_size)
 
+    def write_tokens(self, k: jax.Array, v: jax.Array,
+                     mask: Optional[jax.Array] = None) -> "PagedKVCache":
+        """Batched multi-token write: S tokens per slot at each slot's own
+        logical positions [len, len + S) — the teacher-forced verify block
+        of speculative decoding.  Linear addressing only (the speculative
+        path rejects SWA upstream: a rolling write could not be rolled
+        back exactly).  Reuses the TRASH-page machinery of ``write_token``
+        twice over: positions past the slot buffer AND every row of
+        masked-off slots are redirected to the trash page, and masked
+        slots' lengths do not advance.  Rejected rows are later undone by
+        ``truncate_to`` — the pool keeps the stale codes but ``lengths``
+        masks them out of every read."""
+        B, S = k.shape[0], k.shape[1]
+        t = (self.lengths[:, None]
+             + jnp.arange(S, dtype=jnp.int32)[None, :])       # (B, S)
+        page = jnp.clip(t // self.page_size, 0,
+                        self.page_table.shape[1] - 1)
+        phys = jnp.take_along_axis(self.page_table, page, 1)  # (B, S)
+        phys = jnp.where(t < self.buf, phys, TRASH_PAGE)
+        if mask is None:
+            step = jnp.int32(S)
+        else:
+            m = jnp.asarray(mask, bool)
+            phys = jnp.where(m[:, None], phys, TRASH_PAGE)
+            step = m.astype(jnp.int32) * S
+        off = t % self.page_size
+        kcod, ksc = _kv_quant_any(k, self.fmt, self.block)
+        vcod, vsc = _kv_quant_any(v, self.fmt, self.block)
+        return PagedKVCache(
+            self.k_codes.at[phys, off].set(kcod),
+            self.k_scales.at[phys, off].set(ksc),
+            self.v_codes.at[phys, off].set(vcod),
+            self.v_scales.at[phys, off].set(vsc),
+            self.page_table, self.lengths + step,
+            self.fmt, self.block, self.page_size)
+
+    def truncate_to(self, slot, new_len) -> "PagedKVCache":
+        """Exact rollback of rejected appends: shrink length(s) to
+        ``new_len`` without touching pool contents.  Rows in
+        [new_len, old_len) become invisible immediately — every read
+        masks by ``lengths`` (kv_len), the same mechanism that hides
+        right-pad garbage — and the next append overwrites them in
+        place, so no zeroing pass exists to diverge bit-wise.  Page
+        refcounts live host-side (the scheduler's PagePool) and are
+        untouched: pages stay with the slot, only the logical
+        high-water mark moves.
+
+        ``slot=None``: batched rollback, ``new_len`` a (B,) vector
+        (broadcasts over a scan-stacked (L, B) ``lengths``).  Clamped so
+        truncation can never extend a slot."""
+        nl = jnp.asarray(new_len, jnp.int32)
+        if slot is None:
+            lens = jnp.minimum(self.lengths, nl)
+        else:
+            cur = self.lengths[slot]
+            lens = self.lengths.at[slot].set(jnp.minimum(cur, nl))
+        return dataclasses.replace(self, lengths=lens)
+
     # ---- reads ----------------------------------------------------------
 
     def gather_slots(self):
@@ -848,12 +906,8 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
                 slot, k, v, S if plen is None else plen)
             o = attention_core(q, k, v, qpos=positions, kpos=positions,
                                causal=causal, window=window, chunk=chunk)
-        else:
-            # batched decode (S == 1): per-slot write + per-slot read
-            if S != 1:
-                raise ValueError("paged caches prefill one slot at a time "
-                                 "(pass slot=...); batched S>1 writes are "
-                                 "the lockstep caches' path")
+        elif S == 1:
+            # batched decode: per-slot write + per-slot read
             new_cache = cache.write_token(k, v, mask=write_mask)
             lengths = new_cache.lengths                   # post-write
             if window is not None:
@@ -864,6 +918,25 @@ def attn_apply(p, x, ctx: QCtx, *, n_heads: int, n_kv: int, hd: int,
             kv_len = jnp.minimum(lengths, buf)
             o = _attn_decode_paged(q, new_cache, qpos=positions, kpos=kpos,
                                    causal=causal, window=window,
+                                   kv_len=kv_len, chunk=chunk)
+        else:
+            # batched verify (speculative decode, S == k): write the k
+            # teacher-forced rows at each slot's [len, len + k), then read
+            # through the page table with per-slot positions.  Causal
+            # masking makes query row j see exactly rows [0, len + j] —
+            # the same set the sequential decode of token j would see —
+            # and RtN row quantization is neighbor-independent, so each
+            # row's logits are BIT-identical to non-speculative decode.
+            if window is not None:
+                raise NotImplementedError(
+                    "speculative verify needs a linear paged cache; SWA "
+                    "rolling buffers cannot roll back exactly")
+            new_cache = cache.write_tokens(k, v, mask=write_mask)
+            kpos = jnp.broadcast_to(
+                jnp.arange(buf, dtype=jnp.int32)[None, :], (B, buf))
+            kv_len = jnp.minimum(new_cache.lengths, buf)
+            o = _attn_decode_paged(q, new_cache, qpos=positions, kpos=kpos,
+                                   causal=causal, window=None,
                                    kv_len=kv_len, chunk=chunk)
     elif cache is not None and xkv is None:
         packed = isinstance(cache, PackedKVCache)

@@ -211,6 +211,34 @@ def prefill_chunk(params, cfg: ModelConfig, qcfg: QuantConfig, tokens,
         f"paged cache (K/V are not a pure function of the prompt prefix)")
 
 
+def verify_k(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, carry,
+             *, seed=0, write_mask=None):
+    """Teacher-forced speculative verify: ``tokens`` (B, k) written into
+    the paged carry at each slot's [len, len + k) and attended with
+    per-slot causal positions — row j's logits are bit-identical to
+    sequential decode (see ``transformer.verify_k``).  Returns
+    (logits (B, k, V), carry).
+
+    Dense/moe transformers only: verification needs an exactly
+    rewindable cache (``PagedKVCache.truncate_to``); recurrent state
+    absorbs drafted tokens irreversibly, and the whisper decoder's
+    cross-attention carry is out of scope for the paged engine."""
+    if cfg.family in ("dense", "moe"):
+        return transformer.verify_k(params, cfg, qcfg, tokens, carry,
+                                    seed=seed, write_mask=write_mask)
+    raise NotImplementedError(
+        f"verify_k: family {cfg.family!r} cannot roll back rejected "
+        f"drafts (no exactly-truncatable paged cache)")
+
+
+def draft_view(params, carry, draft_layers: int):
+    """Self-draft truncation of the SAME stacked weights/caches to the
+    first ``draft_layers`` layers (zero extra HBM — a trace-level slice
+    of the layer axis; see ``transformer.draft_view``).  Use with
+    ``dataclasses.replace(cfg, n_layers=draft_layers)``."""
+    return transformer.draft_view(params, carry, draft_layers)
+
+
 def decode_step(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, carry,
                 *, seed=0, write_mask=None):
     """``write_mask`` ((B,) bool): paged dense/moe decode only — slots

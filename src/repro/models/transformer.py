@@ -250,6 +250,44 @@ def decode_step(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, caches,
     return _logits(params, cfg, qcfg, x, seed), new_caches
 
 
+def verify_k(params, cfg: ModelConfig, qcfg: QuantConfig, tokens, caches,
+             *, seed=0, write_mask=None):
+    """Teacher-forced verify pass over a speculative block: ``tokens`` is
+    (B, k) — each slot's last committed token followed by k-1 drafted
+    tokens — written into the paged caches at [len, len + k) and attended
+    with per-slot causal positions.  Query row j sees exactly the rows
+    [0, len + j] a sequential decode of token j would see, and RtN row
+    quantization is neighbor-independent, so row j's logits are
+    BIT-identical to non-speculative decode — the acceptance check can
+    use strict argmax equality.  Rejected rows are rolled back by the
+    caller via ``PagedKVCache.truncate_to``.
+
+    ``write_mask`` ((B,) bool): masked-off slots write to the trash page
+    and keep their length.  Returns (logits (B, k, V), caches)."""
+    x = params["embed"][tokens]
+    x, new_caches, _ = apply_layers(params, cfg, qcfg, x, seed,
+                                    positions=None, caches=caches,
+                                    remat=False, write_mask=write_mask)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _logits(params, cfg, qcfg, x, seed), new_caches
+
+
+def draft_view(params, caches, draft_layers: int):
+    """Self-draft view: the SAME stacked weights (and caches) truncated to
+    the first ``draft_layers`` layers.  A pure trace-level slice of the
+    leading layer axis — no copy of the packed store persists, so the
+    draft model costs zero extra HBM for weights.  Embedding, final norm
+    and lm_head are shared as-is.  Pair with
+    ``dataclasses.replace(cfg, n_layers=draft_layers)`` so scan sees the
+    truncated depth.  Returns (draft_params, draft_caches)."""
+    dp = dict(params)
+    dp["layers"] = jax.tree_util.tree_map(lambda a: a[:draft_layers],
+                                          params["layers"])
+    dc = (None if caches is None else
+          jax.tree_util.tree_map(lambda a: a[:draft_layers], caches))
+    return dp, dc
+
+
 def loss_fn(params, cfg: ModelConfig, qcfg: QuantConfig, batch, *, seed=0,
             remat: bool = True):
     """Next-token cross-entropy (+ MoE aux).  batch: {tokens, (prefix_embeds)}."""

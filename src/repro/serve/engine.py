@@ -15,7 +15,7 @@ Two engines share the packed-weight/packed-cache machinery:
     NVFP4 KV cache.  Request lifecycle (admission queue, per-slot lengths,
     slot free/reuse on EOS/max_len, demand-driven paging + preemption,
     abort/timeout cancellation, the exact shared-prefix cache) lives in
-    ``serve/scheduler.py`` on the host; the device side is EXACTLY FOUR
+    ``serve/scheduler.py`` on the host; the device side is EXACTLY FIVE
     jitted programs with static shapes —
 
         prefill-into-slot : right-padded (1, prefill_len) prompt into one
@@ -30,6 +30,13 @@ Two engines share the packed-weight/packed-cache machinery:
         batched decode    : one token for every slot, per-slot
                             kv_len/q_offset VECTOR operands + an active
                             mask freezing mid-prefill slots
+        verify-k          : speculative decoding (``spec_k``) — the
+                            layer-truncated self-draft proposes k-1
+                            tokens per slot, one teacher-forced pass
+                            verifies the block bit-exactly, rejected
+                            cache rows roll back (truncate_to); static
+                            (slots, k) shapes, accepted length is a
+                            dynamic OUTPUT
 
     so admitting a queued request into a freed slot never recompiles.
     Host sync happens once per scheduler TICK (``decode_chunk`` steps),
@@ -102,6 +109,22 @@ class ServeConfig:
     # linear (non-SWA) caches only.
     prefix_cache: bool = False
     prefix_cache_pages: Optional[int] = None   # cap on cached pages (LRU)
+    # ---- speculative decoding (ContinuousEngine) ------------------------
+    # self-draft verify-k: every decode tick, a draft model made of the
+    # FIRST ``draft_layers`` layers of the SAME packed weights (a trace-
+    # level slice of the stacked layer axis — zero extra HBM for weights)
+    # proposes spec_k - 1 greedy tokens per slot from a sliced, discarded
+    # copy of the paged caches; ONE batched teacher-forced verify pass
+    # through the quantized paged cache then accepts the longest matching
+    # greedy prefix plus one corrected token (1..spec_k tokens per slot
+    # per tick) and rolls the rejected rows back exactly
+    # (PagedKVCache.truncate_to).  Greedy verification is provably
+    # output-identical: speculative streams are BIT-identical to the
+    # non-speculative engine for every kv_cache_format.  Greedy only
+    # (temperature == 0), dense/moe families, linear (non-SWA) caches.
+    spec_k: Optional[int] = None        # verify block size (None = off)
+    draft_layers: Optional[int] = None  # draft depth (None with spec_k on:
+                                        # n_layers // 2)
     # ---- mesh-native serving --------------------------------------------
     # "--mesh" spec ("tp=2", "dp=2,tp=4", ...) for the explicit serving
     # Mesh BOTH engines place their weights and KV pools under.  None means
@@ -299,6 +322,33 @@ class ContinuousEngine:
                 raise ValueError(
                     f"prefill_chunk {scfg.prefill_chunk} out of range "
                     f"[1, {self.slot_buf}]")
+        self.spec = scfg.spec_k is not None
+        self.draft_layers = 0
+        if scfg.draft_layers is not None and not self.spec:
+            raise ValueError("draft_layers requires spec_k (speculative "
+                             "decoding off)")
+        if self.spec:
+            if cfg.family not in ("dense", "moe"):
+                raise NotImplementedError(
+                    "speculative decoding needs an exactly rewindable "
+                    "paged cache: dense/moe families only")
+            if cfg.sliding_window is not None:
+                raise NotImplementedError(
+                    "speculative decoding needs a linear cache; SWA "
+                    "rolling buffers cannot roll back exactly")
+            if scfg.temperature > 0.0:
+                raise NotImplementedError(
+                    "speculative verify is greedy-only (temperature 0): "
+                    "the acceptance rule is exact argmax agreement")
+            if scfg.spec_k < 2:
+                raise ValueError(f"spec_k must be >= 2, got {scfg.spec_k}")
+            dl = (scfg.draft_layers if scfg.draft_layers is not None
+                  else max(1, cfg.n_layers // 2))
+            if not 1 <= dl <= cfg.n_layers:
+                raise ValueError(
+                    f"draft_layers {dl} out of range [1, {cfg.n_layers}]")
+            self.draft_layers = dl
+            self._draft_cfg = dataclasses.replace(cfg, n_layers=dl)
         self._root = jax.random.PRNGKey(scfg.seed)
 
         self._prefill = jax.jit(self._prefill_impl, donate_argnums=(4,))
@@ -307,6 +357,7 @@ class ContinuousEngine:
         self._prefill_chk = jax.jit(self._prefill_chunk_impl,
                                     donate_argnums=(3,))
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._verify = jax.jit(self._verify_k_impl, donate_argnums=(1,))
 
     def _replicate(self, *xs):
         """See ``Engine._replicate`` — stable input shardings under the
@@ -388,6 +439,76 @@ class ContinuousEngine:
         return nxt, margin, steps, shd.constrain_serve_cache(carry,
                                                              self.mesh)
 
+    def _verify_k_impl(self, tokens, carry, rids, steps, active):
+        """Fifth jitted program — speculative verify-k, static (slots, k)
+        shapes with the accepted length as a dynamic OUTPUT, so one
+        compile serves every tick whatever each slot accepts.
+
+        Three phases, all inside one jit:
+          1. DRAFT: the layer-truncated self-draft model (first
+             ``draft_layers`` layers of the same packed weights) greedily
+             proposes k-1 tokens per slot from a SLICED COPY of the paged
+             caches.  The copy is discarded after drafting — functional
+             purity means the real carry is never touched, so there is no
+             draft state to merge or roll back, and the sliced layers'
+             cache rows are exactly the draft model's own history (layer
+             l < draft_layers of the target computes the identical
+             rows).
+          2. VERIFY: one teacher-forced pass of the block [t0, d1..dk-1]
+             through the full model's paged quantized cache.  Causal
+             masking + per-slot kv_len give query row j exactly the rows
+             [0, len + j] sequential decode would see, so row j's greedy
+             pick is BIT-identical to non-speculative decode.
+          3. ACCEPT + ROLLBACK: the longest prefix of drafts matching the
+             verify argmaxes plus one corrected token is emitted
+             (n_emit in 1..k); ``truncate_to`` rewinds every layer's
+             lengths over the rejected rows (the pool keeps their stale
+             codes — reads mask by length, the next append overwrites).
+        """
+        scfg = self.scfg
+        k = scfg.spec_k
+        mask = active if scfg.prefill_chunk is not None else None
+        dparams, dcarry = registry.draft_view(self.params, carry,
+                                              self.draft_layers)
+        blk = [tokens]
+        tok = tokens
+        for _ in range(k - 1):
+            lg, dcarry = registry.decode_step(
+                dparams, self._draft_cfg, self.qcfg, tok[:, None], dcarry,
+                write_mask=mask)
+            tok = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+            blk.append(tok)
+        blk = jnp.stack(blk, axis=1)                         # (B, k)
+        lg, carry = registry.verify_k(self.params, self.cfg, self.qcfg,
+                                      blk, carry, write_mask=mask)
+        g = jnp.argmax(lg, axis=-1).astype(jnp.int32)        # (B, k)
+        margin = _greedy_margin(lg)                          # (B, k)
+        match = (g[:, :k - 1] == blk[:, 1:]).astype(jnp.int32)
+        acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)    # (B,) 0..k-1
+        n_emit = acc + 1                                     # (B,) 1..k
+        wrote = (jnp.ones_like(n_emit) if mask is None
+                 else mask.astype(jnp.int32))
+        if mask is not None:
+            n_emit = n_emit * wrote              # masked slots emit nothing
+        # exact rollback: post-write lengths are base + k*wrote; rewind
+        # to base + n_emit (a pure lengths update, pool bytes untouched)
+        delta = n_emit - jnp.int32(k) * wrote
+
+        def rb(c):
+            if isinstance(c, PagedKVCache):
+                return c.truncate_to(None, c.lengths + delta)
+            return c
+
+        carry = jax.tree_util.tree_map(
+            rb, carry, is_leaf=lambda x: isinstance(x, PagedKVCache))
+        # next tick's t0: the LAST emitted token, g[slot, n_emit - 1]
+        nxt = jnp.take_along_axis(
+            g, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)[:, 0]
+        g, margin, n_emit, nxt, steps = self._pin(
+            g, margin, n_emit, nxt, steps + n_emit)
+        return g, margin, n_emit, nxt, steps, \
+            shd.constrain_serve_cache(carry, self.mesh)
+
     # ---- jit-cache introspection (no-recompile guarantees) -----------------
 
     @property
@@ -405,6 +526,10 @@ class ContinuousEngine:
     @property
     def decode_compiles(self) -> int:
         return self._decode._cache_size()
+
+    @property
+    def verify_compiles(self) -> int:
+        return self._verify._cache_size()
 
     # ---- host-side plumbing ------------------------------------------------
 
@@ -464,6 +589,10 @@ class ContinuousEngine:
         forced = forced or {}
         extras = extras or {}
         chunked = scfg.prefill_chunk is not None
+        if self.spec and forced:
+            raise NotImplementedError(
+                "teacher-forced streams are incompatible with speculative "
+                "decoding (the verify block IS the fed stream)")
         sched = self.scheduler if (scfg.prefix_cache and
                                    getattr(self, "scheduler", None)
                                    is not None) else None
@@ -504,6 +633,9 @@ class ContinuousEngine:
                                  f"slot capacity {self.slot_buf}")
         else:
             prefill_pad = self._derive_prefill_len(requests)
+        # partial-suffix preemption: re-admission suffixes must fit the
+        # static prefill pad (chunked mode streams any suffix length)
+        sched.resume_pad = None if chunked else prefill_pad
 
         tokens, rids, steps = self._replicate(
             jnp.zeros((self.n_slots,), jnp.int32),
@@ -600,12 +732,21 @@ class ContinuousEngine:
             # still mid-prefill neither emit nor commit (their cache
             # writes are masked to the trash page with frozen lengths).
             active = sched.decoding_slots()
-            T = sched.tick_steps(scfg.decode_chunk,
-                                 {s: 1 for s in pending})
-            # demand-driven paging: grow rows for this tick's writes; on
-            # pool exhaustion the youngest slot is preempted (requeued,
-            # its pages released) — drop its host state and trash its row
-            growth, preempted = sched.ensure_capacity(T)
+            if self.spec:
+                # one verify pass per tick; pages must cover the k
+                # CANDIDATE rows, but written advances by the ACCEPTED
+                # length only (advance_written, after the host sync)
+                T = 1 if active else 0
+                growth, preempted = sched.ensure_capacity(
+                    scfg.spec_k if active else 0, advance=False)
+            else:
+                T = sched.tick_steps(scfg.decode_chunk,
+                                     {s: 1 for s in pending})
+                # demand-driven paging: grow rows for this tick's writes;
+                # on pool exhaustion the youngest slot is preempted
+                # (requeued, its pages released) — drop its host state
+                # and trash its row
+                growth, preempted = sched.ensure_capacity(T)
             for slot, row in growth:
                 carry = self._set_page_row(carry, slot, row)
             for slot in preempted:
@@ -618,30 +759,46 @@ class ContinuousEngine:
             amask = np.zeros((self.n_slots,), bool)
             amask[active] = True
             amask = self._replicate(jnp.asarray(amask))
-            picks, margs = [], []
-            for _ in range(T):
-                nxt, margin, steps, carry = self._decode(tokens, carry,
-                                                         rids, steps,
-                                                         amask)
-                picks.append(nxt)
-                margs.append(margin)
+            ne = np.zeros((self.n_slots,), np.int32)
+            if self.spec and active:
+                # -- speculative tick: draft + verify + rollback, one call
+                g, margin, ne_d, nxt, steps, carry = self._verify(
+                    tokens, carry, rids, steps, amask)
                 tokens = nxt
-                for slot, idx in slot_fed.items():      # teacher forcing
-                    stream = forced[slot_rid[slot]]
-                    nxt_idx = min(idx + 1, len(stream) - 1)
-                    tokens = tokens.at[slot].set(int(stream[nxt_idx]))
-                    slot_fed[slot] = nxt_idx
+                em_s = np.asarray(g)                  # (n_slots, k)
+                mg_s = np.asarray(margin)
+                ne = np.asarray(ne_d)
+                em = em_s.T                           # commit reads [:, slot]
+                mg = mg_s.T
+            elif self.spec:
+                em = np.zeros((0, self.n_slots), np.int32)
+                mg = np.zeros((0, self.n_slots), np.float32)
+            else:
+                picks, margs = [], []
+                for _ in range(T):
+                    nxt, margin, steps, carry = self._decode(tokens, carry,
+                                                             rids, steps,
+                                                             amask)
+                    picks.append(nxt)
+                    margs.append(margin)
+                    tokens = nxt
+                    for slot, idx in slot_fed.items():  # teacher forcing
+                        stream = forced[slot_rid[slot]]
+                        nxt_idx = min(idx + 1, len(stream) - 1)
+                        tokens = tokens.at[slot].set(int(stream[nxt_idx]))
+                        slot_fed[slot] = nxt_idx
 
-            # -- ONE host sync per tick: emitted picks + margins + firsts
-            em = (np.asarray(jnp.stack(picks, 0)) if picks
-                  else np.zeros((0, self.n_slots), np.int32))
-            mg = (np.asarray(jnp.stack(margs, 0)) if margs
-                  else np.zeros((0, self.n_slots), np.float32))
+                # ONE host sync per tick: emitted picks + margins + firsts
+                em = (np.asarray(jnp.stack(picks, 0)) if picks
+                      else np.zeros((0, self.n_slots), np.int32))
+                mg = (np.asarray(jnp.stack(margs, 0)) if margs
+                      else np.zeros((0, self.n_slots), np.float32))
             first_slots = sorted(pending)
             firsts = {} if not first_slots else dict(zip(first_slots, zip(
                 np.asarray(jnp.stack([pending[s][0] for s in first_slots])),
                 np.asarray(jnp.stack([pending[s][1] for s in first_slots])))))
             pending.clear()
+            emitted_counts = []
             for slot in active:
                 rid = slot_rid[slot]
                 toks, margins = [], self.margins.setdefault(rid, [])
@@ -649,14 +806,26 @@ class ContinuousEngine:
                     met.first_token(rid, tick)
                     toks.append(int(firsts[slot][0]))
                     margins.append(float(firsts[slot][1]))
-                toks += [int(t) for t in em[:, slot]]
-                margins += [float(m) for m in mg[:, slot]]
+                if self.spec:
+                    # variable per-slot advance: the accepted prefix + the
+                    # corrected token; written grows by the SAME count so
+                    # the high-water mark tracks the rolled-back lengths
+                    n = int(ne[slot])
+                    sched.advance_written(slot, n)
+                    emitted_counts.append(n)
+                    toks += [int(t) for t in em[:n, slot]]
+                    margins += [float(m) for m in mg[:n, slot]]
+                else:
+                    toks += [int(t) for t in em[:, slot]]
+                    margins += [float(m) for m in mg[:, slot]]
                 sched.commit(slot, toks, scfg.eos_id)
                 if sched.slots[slot] is None:           # freed: park pages
                     carry = self._set_page_row(carry, slot, trash_row)
                     slot_rid[slot] = None
                     slot_fed.pop(slot, None)
                     met.finished(rid, tick, len(sched.results[rid]))
+            if self.spec:
+                met.spec_tick(emitted_counts, scfg.spec_k)
             sched.count_tick(T, n_active=len(active))
             met.tick(queue_depth=len(sched.queue), n_active=len(active))
             tick += 1

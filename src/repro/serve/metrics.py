@@ -70,6 +70,12 @@ class MetricsRecorder:
         self.queue_depth: List[int] = []       # gauge, one entry per tick
         self.active_depth: List[int] = []      # decoding slots per tick
         self.counters: Dict[str, int] = {}     # scheduler stats snapshot
+        # speculative decoding (one sample per SLOT per verify tick):
+        # tokens the verify emitted for that slot (accepted prefix + the
+        # corrected token, 1..k) and its acceptance rate (accepted
+        # drafts / (k-1) proposed)
+        self.spec_accepted: List[int] = []
+        self.spec_rate: List[float] = []
 
     # ---- lifecycle events ----------------------------------------------
 
@@ -108,6 +114,17 @@ class MetricsRecorder:
         self.queue_depth.append(int(queue_depth))
         self.active_depth.append(int(n_active))
 
+    def spec_tick(self, emitted: Sequence[int], k: int) -> None:
+        """One speculative verify tick: ``emitted`` holds the per-slot
+        token counts the verify emitted (accepted prefix + corrected
+        token — 1..k each) for the slots that decoded this tick.  The
+        accepted-tokens/tick/slot trajectory is ``emitted`` itself; the
+        acceptance rate divides the accepted DRAFTS (emitted - 1) by the
+        k-1 proposed."""
+        for n in emitted:
+            self.spec_accepted.append(int(n))
+            self.spec_rate.append((int(n) - 1) / max(1, k - 1))
+
     def set_counters(self, stats: Dict[str, int]) -> None:
         self.counters = {k: int(v) for k, v in stats.items()}
 
@@ -135,7 +152,7 @@ class MetricsRecorder:
         done = [r for r in self.requests.values() if r["done"] is not None]
         canc = [r for r in self.requests.values()
                 if r["cancelled"] is not None]
-        return {
+        out = {
             "ticks": len(self.queue_depth),
             "submitted": len(self.requests),
             "completed": len(done),
@@ -147,3 +164,8 @@ class MetricsRecorder:
             "active_slots": percentile_summary(self.active_depth),
             "counters": dict(self.counters),
         }
+        if self.spec_accepted:
+            out["spec_accepted_per_tick_slot"] = percentile_summary(
+                self.spec_accepted)
+            out["spec_acceptance_rate"] = percentile_summary(self.spec_rate)
+        return out

@@ -9,11 +9,12 @@ The serving stack splits into two layers:
     with deterministic preemption, and the exact shared-prefix cache
     (serve/prefix_cache.py).  Nothing here touches jax; decisions are
     made once per scheduler TICK, not per token.
-  * ``serve/engine.ContinuousEngine`` — exactly three jitted programs
+  * ``serve/engine.ContinuousEngine`` — a fixed set of jitted programs
     with static shapes (prefill-into-slot, suffix prefill for warm
-    prefixes, batched decode over all slots) whose dynamic state (page
-    table, per-slot lengths, request ids) lives in device operands, so
-    admission into a freed slot never recompiles.
+    prefixes, chunked prefill, batched decode over all slots, and the
+    speculative verify-k) whose dynamic state (page table, per-slot
+    lengths, request ids) lives in device operands, so admission into a
+    freed slot never recompiles.
 
 Paging is DEMAND-DRIVEN (vLLM-style): admission allocates only the
 pages covering the prompt — ``ceil(plen / page_size)`` minus whatever a
@@ -23,7 +24,11 @@ On pool exhaustion the scheduler first evicts LRU refcount-0 prefix-
 cache pages, then PREEMPTS the youngest active slot (its private pages
 return to the pool, its request requeues at the head of the FIFO —
 deterministic, and with per-request sampling streams the re-run
-regenerates the identical token stream).  Physical page 0 is the TRASH
+regenerates the identical token stream).  With the prefix cache on,
+preemption is PARTIAL-SUFFIX: the victim's full written pages are
+adopted by the prefix cache and the request requeues with its effective
+prompt (original + generated so far), so re-admission recomputes at
+most one partial page instead of the whole stream.  Physical page 0 is the TRASH
 page (layers.TRASH_PAGE): freed slots' table rows point at it, which
 lets the static decode program keep writing for inactive slots without
 corrupting reallocated pages.
@@ -207,6 +212,20 @@ class Scheduler:
         # chunked mode: prefix-cache insertion is DEFERRED until a slot's
         # final chunk is issued (its pages hold nothing shareable before)
         self._pending_insert: Dict[int, np.ndarray] = {}
+        # partial-suffix preemption: rid -> (original prompt, tokens
+        # generated before preemption).  The requeued request carries the
+        # EFFECTIVE prompt (original + generated) so re-admission shares
+        # the retained full pages and prefills only the tail; the saved
+        # tokens are restored into the new SlotState so the result stream
+        # is the full generation.  Entries are dropped on re-admission,
+        # cancel, or fallback-to-recompute.
+        self._resume: Dict[int, Tuple[np.ndarray, List[int]]] = {}
+        # engine-set cap on the re-admission suffix (its static prefill
+        # pad).  A resumed request whose retained pages were LRU-evicted
+        # under pool pressure may face a suffix longer than the pad —
+        # admit() then falls back to recomputing the original request.
+        # None = no cap (chunked prefill streams any suffix).
+        self.resume_pad: Optional[int] = None
         self.results: Dict[int, np.ndarray] = {}
         # rid -> {"reason", "stage", "tokens"} for aborted/timed-out
         # requests (they never appear in ``results``)
@@ -241,6 +260,19 @@ class Scheduler:
             pages = self.pool.alloc(n)
         return pages
 
+    def _admission_plan(self, req: Request
+                        ) -> Tuple[int, int, List[int], int]:
+        """Prompt length, pages needed, shared prefix pages, and shared
+        token count for admitting ``req`` (no allocation, no refs)."""
+        plen = len(req.prompt)
+        prompt_pages = min(max(1, -(-plen // self.page_size)),
+                           self.n_pages_slot)
+        shared: List[int] = []
+        if self.prefix_cache is not None and plen > 1:
+            shared = self.prefix_cache.match(req.prompt)
+            shared = shared[:(plen - 1) // self.page_size]
+        return plen, prompt_pages, shared, len(shared) * self.page_size
+
     def admit(self, tick: int) -> List[Tuple[int, Request, np.ndarray, int]]:
         """Place queued requests (arrival <= tick) into free slots while
         the pool can cover their prompts.  FIFO head-of-line: the queue is
@@ -261,16 +293,22 @@ class Scheduler:
             req = self.queue[0]
             if req.arrival > tick:
                 break
-            plen = len(req.prompt)
+            resume = self._resume.get(req.rid)
             # demand-driven: only the PROMPT's pages at admission; decode
             # pages come from ensure_capacity tick by tick
-            prompt_pages = min(max(1, -(-plen // self.page_size)),
-                               self.n_pages_slot)
-            shared: List[int] = []
-            if self.prefix_cache is not None and plen > 1:
-                shared = self.prefix_cache.match(req.prompt)
-                shared = shared[:(plen - 1) // self.page_size]
-            pfx = len(shared) * self.page_size
+            plen, prompt_pages, shared, pfx = self._admission_plan(req)
+            if (resume is not None and self.resume_pad is not None
+                    and plen - pfx > self.resume_pad):
+                # pool pressure evicted the retained pages since the
+                # preemption: the unshared suffix no longer fits the
+                # engine's static prefill pad — fall back to a full
+                # recompute of the ORIGINAL request (per-request greedy
+                # streams regenerate the identical tokens)
+                self._resume.pop(req.rid)
+                req = dataclasses.replace(req, prompt=resume[0])
+                self.queue[0] = req
+                resume = None
+                plen, prompt_pages, shared, pfx = self._admission_plan(req)
             # pin the matched pages BEFORE allocating: at refcount 1 the
             # eviction inside _alloc_or_evict could reclaim them and hand
             # them straight back as this request's private pages (one
@@ -290,6 +328,14 @@ class Scheduler:
             st = SlotState(req.rid, plen, req.max_new, written=plen,
                            prefill_pos=plen if self.prefill_chunk is None
                            else pfx)
+            if resume is not None:
+                # partial-suffix re-admission: the effective prompt ends
+                # with the retained generation — restore it so commit()
+                # budgets (max_new) and results cover the FULL stream.
+                # The _resume entry stays (its [0] is the ORIGINAL prompt,
+                # needed if this slot is preempted again); it is dropped
+                # on completion or cancellation.
+                st.tokens = list(resume[1])
             self.slots[slot] = st
             self._reqs[slot] = req
             self._adm_seq[slot] = self._seq
@@ -375,23 +421,66 @@ class Scheduler:
 
     def _preempt(self, slot: int) -> None:
         """Release ``slot`` and requeue its request at the FIFO head.
-        Deterministic recompute-style preemption: generated tokens are
-        discarded; per-request sampling streams (keyed by rid, step)
-        regenerate the identical stream on re-admission.  A mid-chunked-
-        prefill victim simply restarts its prefill from the (possibly
-        still cached) prefix when re-admitted."""
+
+        With the prefix cache on, preemption is PARTIAL-SUFFIX: the
+        slot's already-computed FULL pages (exactly the first ``written``
+        rows — spec-mode rollback via ``PagedKVCache.truncate_to`` keeps
+        device lengths == written) are adopted by the prefix cache
+        before release, and the request requeues with the EFFECTIVE
+        prompt (original + ALL committed tokens, length written + 1) so
+        re-admission shares those pages and prefills only the tail.
+        The resumed stream is bit-identical to an uninterrupted run:
+        suffix prefill is quantize-then-attend through the same pages,
+        and the continuation logits come from the same cache state.
+
+        Without the prefix cache (or for a mid-prefill victim) this is
+        recompute-style preemption: generated tokens are discarded and
+        per-request greedy/sampling streams regenerate the identical
+        stream on re-admission."""
+        st = self.slots[slot]
+        keep = (self.prefix_cache is not None and not st.prefilling
+                and st.written >= self.page_size)
+        # the ORIGINAL prompt: a once-resumed slot's live Request already
+        # carries an effective prompt, so orig + st.tokens (tokens since
+        # the FIRST admission) is the invariant reconstruction — its
+        # length equals ``written + 1`` at every preemption depth (the
+        # last committed token's row is always one tick from landing)
+        rid = self._reqs[slot].rid
+        orig = (self._resume[rid][0] if rid in self._resume
+                else self._reqs[slot].prompt)
+        if keep:
+            # the effective prompt is orig + ALL committed tokens — the
+            # LAST committed token's cache row is not written yet (it is
+            # the next tick's input), so the page-cache insert is capped
+            # at ``written`` rows while the requeued prompt keeps the
+            # full stream (suffix prefill rewrites that one row and
+            # samples the continuation, bit-identically)
+            seq = np.concatenate([np.asarray(orig, np.int32),
+                                  np.asarray(st.tokens, np.int32)])
+            # adopt the full written pages BEFORE release: insert refs
+            # them, so _release_slot's free leaves them alive in the tree
+            self.prefix_cache.insert(seq[:st.written], self._rows[slot])
         req = self._release_slot(slot)
+        if keep:
+            self._resume[rid] = (orig, list(st.tokens))
+            req = dataclasses.replace(req, prompt=seq)
         self.queue.appendleft(req)
         self.stats["preemptions"] += 1
 
-    def ensure_capacity(self, steps: int
+    def ensure_capacity(self, steps: int, advance: bool = True
                         ) -> Tuple[List[Tuple[int, np.ndarray]], List[int]]:
         """Grow every active slot's page row to cover this tick's
         ``steps`` decode writes.  Returns (growth, preempted): ``growth``
         is [(slot, new_row)] page-table updates for the engine; pool
         exhaustion evicts prefix-cache pages first, then preempts the
         youngest active slot until the survivors fit (the oldest slot is
-        never preempted, so the trace always progresses)."""
+        never preempted, so the trace always progresses).
+
+        ``advance=False`` (speculative mode): grow rows for the
+        worst-case ``steps`` (= k) candidate writes but do NOT bump
+        ``written`` — the engine reports each slot's ACCEPTED length
+        after the verify via ``advance_written``, so the high-water mark
+        tracks only rows that survive the rollback."""
         growth: List[Tuple[int, np.ndarray]] = []
         preempted: List[int] = []
         if steps > 0:
@@ -427,10 +516,21 @@ class Scheduler:
                     preempted.append(victim)
                     if victim == slot:
                         break
-        for st in self.slots:
-            if st is not None and not st.prefilling:
-                st.written += max(0, steps)
+        if advance:
+            for st in self.slots:
+                if st is not None and not st.prefilling:
+                    st.written += max(0, steps)
         return growth, preempted
+
+    def advance_written(self, slot: int, n: int) -> None:
+        """Speculative-mode bookkeeping: advance a slot's ``written``
+        high-water mark by its ACCEPTED length for the tick (the engine
+        rolled back the rejected candidate rows via ``truncate_to``, so
+        device lengths == written stays the invariant).  Call before
+        ``commit`` — commit may release the slot."""
+        st = self.slots[slot]
+        if st is not None and not st.prefilling:
+            st.written += max(0, n)
 
     def _oldest_active(self) -> Optional[int]:
         live = [s for s, st in enumerate(self.slots) if st is not None]
@@ -478,6 +578,7 @@ class Scheduler:
         if st.done:
             self.results[st.rid] = np.asarray(st.tokens, np.int32)
             self._release_slot(slot)
+            self._resume.pop(st.rid, None)
             self.stats["completed"] += 1
 
     # ---- request lifecycle: abort / timeout ------------------------------
@@ -507,12 +608,15 @@ class Scheduler:
         for i, req in enumerate(self.queue):
             if req.rid == rid:
                 del self.queue[i]
-                self._record_cancel(req, reason, "queued", [])
+                resume = self._resume.pop(rid, None)
+                self._record_cancel(req, reason, "queued",
+                                    [] if resume is None else resume[1])
                 return True
         for slot, st in enumerate(self.slots):
             if st is not None and st.rid == rid:
                 stage = "prefill" if st.prefilling else "decode"
                 req = self._release_slot(slot)
+                self._resume.pop(rid, None)
                 self._record_cancel(req, reason, stage, st.tokens)
                 return True
         return False
@@ -526,7 +630,9 @@ class Scheduler:
                     if self._due(r, tick) is not None]:
             reason = self._due(req, tick)
             self.queue.remove(req)
-            self._record_cancel(req, reason, "queued", [])
+            resume = self._resume.pop(req.rid, None)
+            self._record_cancel(req, reason, "queued",
+                                [] if resume is None else resume[1])
             out.append((None, req.rid, "queued", reason))
         for slot in range(self.n_slots):
             st = self.slots[slot]
@@ -537,6 +643,7 @@ class Scheduler:
                 continue
             stage = "prefill" if st.prefilling else "decode"
             req = self._release_slot(slot)
+            self._resume.pop(req.rid, None)
             self._record_cancel(req, reason, stage, st.tokens)
             out.append((slot, req.rid, stage, reason))
         return out

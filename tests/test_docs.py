@@ -62,6 +62,14 @@ def test_check_env_traffic_mode(capsys):
     assert "traffic harness" in capsys.readouterr().out
 
 
+def test_check_env_spec_mode(capsys):
+    """--spec: jax-free speculative-decoding self-check (greedy
+    acceptance rule, rollback arithmetic, accepted-tokens metrics,
+    scheduler spec protocol, partial-suffix resume bookkeeping)."""
+    assert check_env.main(["--spec"]) == 0, capsys.readouterr().out
+    assert "speculative decoding" in capsys.readouterr().out
+
+
 def test_check_env_lint_mode(capsys):
     """--lint: the fp4lint AST invariants, baseline-exact (jax-free)."""
     assert check_env.main(["--lint"]) == 0, capsys.readouterr().out
@@ -69,11 +77,13 @@ def test_check_env_lint_mode(capsys):
 
 
 def test_check_env_all_mode(capsys):
-    """--all: every self-check (docs, serve, mesh, lint, deps) in one go."""
+    """--all: every self-check (docs, serve, traffic, spec, mesh, lint,
+    deps) in one go."""
     assert check_env.main(["--all"]) == 0, capsys.readouterr().out
     out = capsys.readouterr().out
     for marker in ("docs snippets", "serving scheduler",
-                   "traffic harness", "mesh partition specs", "fp4lint"):
+                   "traffic harness", "speculative decoding",
+                   "mesh partition specs", "fp4lint"):
         assert marker in out, (marker, out)
 
 

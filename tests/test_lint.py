@@ -154,16 +154,21 @@ def test_rounding_policy_with_rounding_in_models():
 
 
 def test_rounding_policy_kernel_decode_scopes():
-    fire = """
-    def decode_read(pool):
-        return dequant(pool, NVFP4.with_rounding(True))
-    """
+    # decode, draft and verify functions are all forward serving paths:
+    # an SR draft desyncs from the RtN verify, an SR verify breaks
+    # bit-exactness vs sequential decode
+    for fn in ("decode_read", "draft_propose", "verify_k_read",
+               "spec_verify"):
+        fire = f"""
+        def {fn}(pool):
+            return dequant(pool, NVFP4.with_rounding(True))
+        """
+        assert rules_of(run(fire, "src/repro/kernels/k.py")) \
+            == {"rounding-policy"}, fn
     ok = """
     def backward_quant(g):
         return quant(g, NVFP4.with_rounding(True))
     """
-    assert rules_of(run(fire, "src/repro/kernels/k.py")) \
-        == {"rounding-policy"}
     assert rules_of(run(ok, "src/repro/kernels/k.py")) == set()
 
 

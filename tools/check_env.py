@@ -4,6 +4,7 @@
   PYTHONPATH=src python tools/check_env.py --docs   # docs snippet check
   PYTHONPATH=src python tools/check_env.py --serve  # scheduler invariants
   PYTHONPATH=src python tools/check_env.py --traffic # workload/lifecycle
+  PYTHONPATH=src python tools/check_env.py --spec   # speculative decoding
   PYTHONPATH=src python tools/check_env.py --mesh   # partition-spec check
   PYTHONPATH=src python tools/check_env.py --lint   # fp4lint AST invariants
   PYTHONPATH=src python tools/check_env.py --all    # every self-check
@@ -35,6 +36,14 @@ nearest-rank percentile math, page-pool conservation under cancellation
 at every stage, and the per-tick-per-slot prefill chunk budget.  Also
 tier-1 (tests/test_docs.py).
 
+``--spec`` is a jax-free self-check of the speculative-decoding host
+machinery (serve/metrics.py spec trajectory + the scheduler's spec
+protocol): the greedy acceptance rule and rollback arithmetic (numpy
+mirrors of the verify program), accepted-tokens/tick/slot percentiles,
+ensure_capacity/advance_written bookkeeping, and partial-suffix
+preemption's written/prompt invariant.  Also tier-1
+(tests/test_docs.py).
+
 ``--mesh`` is a jax-free self-check of the sharded-serving partition-spec
 layer (repro.distributed.specs): ``--mesh tp=N`` CLI grammar, the
 code/scale congruence invariant of packed leaves, drop diagnostics for
@@ -47,8 +56,8 @@ any stale baseline entry — the static invariants (rounding policy, PRNG
 stream discipline, PartitionSpec canonical form, trace hazards, packed
 dtypes; see docs/lint.md).  Also tier-1 (tests/test_docs.py).
 
-``--all`` runs every self-check above (docs, serve, mesh, lint) plus the
-dependency report, and fails if any of them does.
+``--all`` runs every self-check above (docs, serve, traffic, spec, mesh,
+lint) plus the dependency report, and fails if any of them does.
 """
 from __future__ import annotations
 
@@ -488,6 +497,133 @@ def check_traffic() -> int:
     return 0
 
 
+# ---- speculative decoding self-check ------------------------------------------
+
+
+def check_spec() -> int:
+    """Host-side (jax-free) invariants of the speculative-decoding
+    machinery: the greedy acceptance rule (longest matching prefix via
+    a cumulative product of per-position agreement, plus one corrected
+    token — 1..k emitted, always), the rollback arithmetic the verify
+    program applies to cache lengths, the accepted-tokens metrics
+    trajectory, and the scheduler's spec protocol (ensure_capacity
+    without the written advance, then advance_written by the ACCEPTED
+    length) including partial-suffix preemption's written/prompt
+    bookkeeping."""
+    for base in ("src",):
+        p = os.path.join(REPO_ROOT, base)
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    import numpy as np
+    from repro.serve.metrics import MetricsRecorder
+    from repro.serve.scheduler import Request, Scheduler
+
+    errors = []
+
+    # acceptance rule: numpy mirror of the verify program's
+    # acc = sum(cumprod(match)) — longest agreeing prefix, then +1
+    def n_emit(drafts, greedy):
+        match = (np.asarray(greedy[:-1]) == np.asarray(drafts)).astype(int)
+        return int(np.cumprod(match).sum()) + 1
+
+    for drafts, greedy, want in (
+            ([5, 6, 7], [5, 6, 7, 8], 4),      # all accepted: k tokens
+            ([5, 6, 7], [5, 6, 9, 8], 3),      # 2 drafts + correction
+            ([5, 6, 7], [9, 6, 7, 8], 1),      # first draft wrong
+            ([5, 6, 7], [5, 9, 7, 8], 2),      # later agreement ignored
+            ([], [4], 1)):                     # k=1 degenerate: decode
+        got = n_emit(drafts, greedy)
+        if got != want:
+            errors.append(f"acceptance({drafts}, {greedy}) = {got}, "
+                          f"want {want}")
+    # rollback arithmetic: lengths advance by k at write, shrink to
+    # base + n_emit — equivalently += n_emit - k, and 1 <= n_emit <= k
+    for k in (2, 3, 4):
+        for acc in range(k):
+            ne = acc + 1
+            base, after = 37, 37 + k
+            rolled = after + (ne - k)
+            if not base + 1 <= rolled <= base + k:
+                errors.append(f"rollback k={k} acc={acc}: length {rolled} "
+                              f"outside (base, base+k]")
+
+    # metrics: the accepted-tokens/tick/slot trajectory and rate
+    rec = MetricsRecorder()
+    rec.spec_tick([3, 1], k=3)
+    rec.spec_tick([2], k=3)
+    s = rec.summary()
+    acc = s.get("spec_accepted_per_tick_slot", {})
+    if acc.get("n") != 3 or acc.get("max") != 3 or acc.get("p50") != 2:
+        errors.append(f"spec accepted summary wrong: {acc}")
+    rate = s.get("spec_acceptance_rate", {})
+    if rate.get("max") != 1.0 or rate.get("p50") != 0.5:
+        errors.append(f"spec acceptance-rate summary wrong: {rate}")
+    if "spec_accepted_per_tick_slot" in MetricsRecorder().summary():
+        errors.append("spec metrics reported for a non-spec trace")
+
+    # scheduler spec protocol: grow for k candidate rows WITHOUT the
+    # written advance, then advance by the accepted length only
+    k = 3
+    sched = Scheduler(n_slots=1, max_len=32, page_size=4)
+    sched.submit(Request(0, np.arange(10), max_new=9))
+    sched.admit(0)
+    st = sched.slots[0]
+    if st.written != 10:
+        errors.append(f"admission written {st.written} != plen")
+    sched.ensure_capacity(k, advance=False)
+    if st.written != 10:
+        errors.append("ensure_capacity(advance=False) advanced written")
+    for ne, want in ((2, 12), (3, 15)):
+        sched.ensure_capacity(k, advance=False)
+        sched.advance_written(0, ne)
+        if st.written != want:
+            errors.append(f"advance_written: written {st.written} != {want}")
+        sched.commit(0, np.full((ne,), 7), eos_id=-1)
+    if sched.pool.free_pages + sched.pool.pages_in_use \
+            != sched.total_pages - 1:
+        errors.append("spec protocol broke pool conservation")
+
+    # partial-suffix preemption bookkeeping: the requeued effective
+    # prompt carries written + 1 tokens (the last committed token's row
+    # is not in the pages yet); the adopted pages cover exactly written
+    sched = Scheduler(n_slots=1, max_len=32, page_size=4,
+                      prefix_cache=True)
+    sched.submit(Request(1, np.arange(8), max_new=12))
+    sched.admit(0)
+    st = sched.slots[0]
+    sched.commit(0, np.asarray([7]), eos_id=-1)   # prefill-sampled token:
+    # committed WITHOUT a written advance (its row lands next tick)
+    sched.ensure_capacity(k, advance=False)
+    sched.advance_written(0, 3)
+    sched.commit(0, np.asarray([7, 7, 7]), eos_id=-1)
+    written = st.written
+    sched._preempt(0)
+    req = sched.queue[0]
+    if len(req.prompt) != written + 1:
+        errors.append(f"preempted effective prompt {len(req.prompt)} "
+                      f"!= written + 1 ({written + 1})")
+    if sched.prefix_cache.cached_pages != written // 4:
+        errors.append(f"adopted pages {sched.prefix_cache.cached_pages} "
+                      f"!= written // page_size ({written // 4})")
+    placed = sched.admit(1)
+    if not placed or placed[0][3] != written // 4 * 4:
+        errors.append(f"resume did not share the adopted full pages: "
+                      f"{placed}")
+    if list(sched.slots[0].tokens) != [7, 7, 7, 7]:
+        errors.append(f"resume lost committed tokens: "
+                      f"{sched.slots[0].tokens}")
+
+    if errors:
+        for e in errors:
+            print(f"SPEC     {e}")
+        print(f"FATAL: {len(errors)} speculative-decoding error(s)")
+        return 1
+    print("ok       speculative decoding (greedy acceptance rule, rollback "
+          "arithmetic, accepted-tokens metrics, scheduler spec protocol, "
+          "partial-suffix resume)")
+    return 0
+
+
 # ---- mesh spec self-check -----------------------------------------------------
 
 
@@ -653,8 +789,8 @@ def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     if "--all" in argv:
         rc = 0
-        for check in (check_docs, check_serve, check_traffic, check_mesh,
-                      check_lint, check_deps):
+        for check in (check_docs, check_serve, check_traffic, check_spec,
+                      check_mesh, check_lint, check_deps):
             rc |= check()
         return rc
     if "--docs" in argv:
@@ -663,6 +799,8 @@ def main(argv=None) -> int:
         return check_serve()
     if "--traffic" in argv:
         return check_traffic()
+    if "--spec" in argv:
+        return check_spec()
     if "--mesh" in argv:
         return check_mesh()
     if "--lint" in argv:

@@ -178,3 +178,28 @@ print(f"speculative (k=3, draft {sp.draft_layers}/{cfg.n_layers} layers): "
       f"compiles: verify {sp.verify_compiles}, decode {sp.decode_compiles}")
 print(f"speculative == sequential, bit-exact: "
       f"{all(np.array_equal(spec_res[r], results[r]) for r in results)}")
+
+# ---- observability: trace the multi-tenant run, bit-identically --------------
+# A Tracer (repro.obs) records the serve lifecycle on the SIMULATED tick
+# clock: one span per request (submit -> done/cancelled), per-tick engine
+# spans with jit-compile instants, page/prefix-cache counters, first-token
+# marks.  Emission is host-side only (fp4lint's obs-in-jit rule enforces
+# it), so the traced run's tokens are bit-identical to the untraced run
+# above — tracing changes nothing but what you can see.
+from repro.obs import Tracer
+
+trc = Tracer(clock="tick", process="serve_fp4")
+traced = ContinuousEngine(cfg, params, ServeConfig(
+    max_slots=4, batch_size=4, max_len=128, page_size=16,
+    kv_cache_format="nvfp4", prefix_cache=True, prefill_chunk=16),
+    tracer=trc)
+traced_res = traced.run(as_requests(generate_workload(wl)))
+trace_path = "/tmp/serve_fp4_trace.json"
+trc.export(trace_path)
+same = all(np.array_equal(traced_res[r], mt.scheduler.results[r])
+           for r in traced_res)
+print(f"traced rerun bit-identical to untraced: {same}")
+print(f"trace: {trc.n_events} events, {trc.spans_opened} spans "
+      f"({len(trc.open_spans())} unclosed), counters "
+      f"{sorted(trc.counters)[:4]}... -> {trace_path} "
+      f"(open in Perfetto: ui.perfetto.dev)")

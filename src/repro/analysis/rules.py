@@ -1,4 +1,4 @@
-"""The fp4lint rule set: five machine-checked invariants of this repo.
+"""The fp4lint rule set: six machine-checked invariants of this repo.
 
 Every rule's docstring carries a minimal FIRING example (and its clean
 twin where the fix is non-obvious); ``tests/test_lint.py`` executes those
@@ -458,9 +458,91 @@ class PackedDtypeRule(Rule):
                     f"(core/quantize.py, kernels/) — use .dequant()")
 
 
+# ---- 6. obs-in-jit ------------------------------------------------------------
+
+
+_TRACER_NAME_RE = re.compile(r"(^|_)(tracer|trc|obs)($|_)", re.IGNORECASE)
+_TRACER_API = {"begin", "end", "instant", "counter", "gauge", "set_time",
+               "span", "export"}
+
+
+def _walk_same_trace(stmts) -> Iterator[ast.AST]:
+    """Walk statements without descending into nested function defs —
+    nested defs are themselves in ``ctx.traced`` when decorated, and
+    otherwise are host closures whose bodies don't run under this
+    trace."""
+    stack: List[ast.AST] = list(stmts)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            stack.append(child)
+
+
+class ObsInJitRule(Rule):
+    """Observability stays on the host: a ``Tracer`` emission (span,
+    counter, gauge, clock update) inside a traced body is at best a
+    side effect replayed only at trace time — the event records once
+    per COMPILE, not once per executed step — and at worst a host sync
+    on a traced value.  All instrumentation lives in the host loops
+    (engine ticks, trainer steps); code under ``jit`` / ``shard_map``
+    / ``pallas_call`` never sees the tracer (obs/trace.py).
+
+    Fires on any Tracer-API call (``begin`` / ``end`` / ``instant`` /
+    ``counter`` / ``gauge`` / ``set_time`` / ``span`` / ``export``) on
+    a tracer-named receiver (``tracer`` / ``trc`` / ``obs``, with any
+    dotted prefix such as ``self.tracer``), and on ``Tracer(...)``
+    construction, inside a traced body.
+
+    FIRES::
+
+        @jax.jit
+        def decode_step(x, tracer):
+            tracer.counter("decode_steps")   # records once per compile
+            return x
+
+    CLEAN::
+
+        def host_tick(x, tracer):
+            tracer.counter("decode_steps")   # host loop: emit freely
+            return decode_step(x)
+    """
+
+    name = "obs-in-jit"
+    summary = "tracer emission inside a traced body"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn in ctx.traced:
+            body = fn.body if not isinstance(fn, ast.Lambda) else [fn.body]
+            for sub in _walk_same_trace(body):
+                if not isinstance(sub, ast.Call):
+                    continue
+                if terminal_name(sub.func) == "Tracer":
+                    yield ctx.finding(
+                        self.name, sub,
+                        "Tracer constructed inside a traced body — "
+                        "instrumentation is host-side only")
+                    continue
+                if not (isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr in _TRACER_API):
+                    continue
+                recv = terminal_name(sub.func.value)
+                if recv is None or not _TRACER_NAME_RE.search(recv):
+                    continue
+                yield ctx.finding(
+                    self.name, sub,
+                    f"{recv}.{sub.func.attr}() emits telemetry inside a "
+                    f"traced body — the event fires at trace time (once "
+                    f"per compile), not per step; move it to the host "
+                    f"loop")
+
+
 RULES: Dict[str, Rule] = {r.name: r for r in (
     RoundingPolicyRule(), PrngReuseRule(), SpecCanonicalRule(),
-    TraceHazardRule(), PackedDtypeRule())}
+    TraceHazardRule(), PackedDtypeRule(), ObsInJitRule())}
 
 
 def all_rule_names():

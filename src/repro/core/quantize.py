@@ -155,6 +155,36 @@ def fake_quant(x: jax.Array, spec: BlockQuantSpec, *, axis: int = -1,
     return block_quantize(x, spec, axis=axis, key=key, u=u).dequant()
 
 
+def scale_health(x: jax.Array, spec: BlockQuantSpec, *,
+                 axis: int = -1) -> dict:
+    """Block-scale saturation/underflow counts for telemetry (host-side).
+
+    Replays the ``_block_scales`` rounding on ``x`` and counts blocks
+    whose raw scale exceeds the scale format's max (E4M3: 448 — the
+    two-level tensor scale should make this impossible, so a nonzero
+    count flags a scaling bug or an overflowing tensor) or whose nonzero
+    absmax rounds to a zero scale (underflow — ``_block_scales`` clamps
+    it to 1.0, quantizing the whole block to zero).  Returns plain ints;
+    call OUTSIDE jit (this is trainer telemetry, not a training op).
+    """
+    axis = _norm_axis(x.ndim, axis)
+    xf = jnp.asarray(x).astype(jnp.float32)
+    xb = _blocked(xf, axis, spec.block)
+    absmax = jnp.max(jnp.abs(xb), axis=axis + 1)
+    tscale = _tensor_scale(jnp.max(jnp.abs(xf)), spec)
+    if spec.scale_fmt == "e8m0":
+        scale = formats.e8m0_floor(absmax) / (2.0 ** spec.data.emax)
+        saturated = jnp.zeros((), jnp.int32)  # E8M0 spans the fp32 range
+        underflow = jnp.sum((scale <= 0) & (absmax > 0))
+    else:
+        raw = absmax / (spec.data.max * tscale)
+        scale = formats.quantize_rtn(raw, spec.scale)
+        saturated = jnp.sum(raw > spec.scale.max)
+        underflow = jnp.sum((scale <= 0) & (absmax > 0))
+    return {"blocks": int(absmax.size), "saturated": int(saturated),
+            "underflow": int(underflow)}
+
+
 # ---- packed storage (serving weight store / checkpoint / cache paths) --------
 
 # E2M1 magnitude grid, indexed by the 3 low nibble bits (matches the

@@ -70,3 +70,15 @@ def probe_sigma_from_grads(exact_grads, quant_grads) -> jax.Array:
         num += jnp.sum(r * r)
         den += r.size
     return jnp.sqrt(num / jnp.maximum(den, 1) + 1e-30)
+
+
+def layer_ratio(grad_norm: float, sigma_q: float, n_params: int) -> float:
+    """One layer's ‖g_i‖ / (σ_q·√d_i) — the per-layer §4 statistic.
+
+    Pure-python floats (host-side telemetry: the trainer maps it over
+    per-leaf gradient norms to flag layers whose own gradient signal has
+    sunk under the √3 noise floor while the GLOBAL ratio still clears it
+    — the per-layer early warning the global EMA averages away)."""
+    import math
+    return float(grad_norm) / (float(sigma_q)
+                               * math.sqrt(max(int(n_params), 1)) + 1e-30)

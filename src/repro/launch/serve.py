@@ -99,6 +99,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0,
                     help="PRNG seed for weight init (ignored with "
                          "--ckpt-dir when a checkpoint is restored)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a Chrome-trace-event JSON of the serve "
+                         "run (simulated tick clock: request spans, page/"
+                         "prefix-cache counters, jit-compile instants) "
+                         "and write it to PATH — open in Perfetto "
+                         "(ui.perfetto.dev).  Host-side only: tokens are "
+                         "bit-identical to an untraced run (implies "
+                         "--queue)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -136,13 +144,18 @@ def main(argv=None):
     qcfg = fqt.bf16_config() if args.bf16 else None
     rng = np.random.default_rng(0)
 
-    if (args.prefix_cache or args.prefill_chunk or args.spec_decode) \
-            and not args.queue:
+    if (args.prefix_cache or args.prefill_chunk or args.spec_decode
+            or args.trace) and not args.queue:
         args.queue = 8          # continuous-engine knobs imply --queue
+
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer(clock="tick", process="serve")
 
     if args.queue:
         # continuous batching: staggered arrivals through the scheduler
-        eng = ContinuousEngine(cfg, params, scfg, qcfg=qcfg)
+        eng = ContinuousEngine(cfg, params, scfg, qcfg=qcfg, tracer=tracer)
         shared = rng.integers(0, cfg.vocab_size, args.shared_prefix)
         reqs = [Request(rid=i,
                         prompt=np.concatenate(
@@ -187,6 +200,12 @@ def main(argv=None):
                   f"(p50 {acc['p50']:.0f}, p95 {acc['p95']:.0f}), "
                   f"acceptance rate {rate['mean']:.2f} over "
                   f"{acc['n']} verify samples")
+        if tracer is not None:
+            tracer.export(args.trace)
+            print(f"trace: {tracer.n_events} events "
+                  f"({tracer.spans_opened} spans, "
+                  f"{len(tracer.open_spans())} unclosed) -> {args.trace} "
+                  f"(open in Perfetto: ui.perfetto.dev)")
         for rid in sorted(res)[:4]:
             print(f"req {rid}: {res[rid][:16].tolist()} ...")
         return

@@ -51,6 +51,12 @@ def main(argv=None):
     ap.add_argument("--log-json", default=None)
     ap.add_argument("--seed", type=int, default=0,
                     help="root PRNG seed (init + data stream)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a Chrome-trace-event JSON of quant-health "
+                         "telemetry (optimizer-step clock: per-layer "
+                         "√3-floor ratios, E4M3 scale saturation/underflow, "
+                         "SR/RtN rounding tallies, one entry per log_every "
+                         "steps) to PATH — open in Perfetto")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -74,8 +80,19 @@ def main(argv=None):
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                           global_batch=args.batch)
 
-    trainer = Trainer(cfg, QUANT[args.quant](), tcfg, run_cfg, data_cfg)
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer(clock="step", process="train")
+
+    trainer = Trainer(cfg, QUANT[args.quant](), tcfg, run_cfg, data_cfg,
+                      tracer=tracer)
     trainer.run(jax.random.PRNGKey(args.seed))
+    if tracer is not None:
+        tracer.export(args.trace)
+        print(f"trace: {tracer.n_events} events "
+              f"(clock=step, every {run_cfg.log_every} steps) -> "
+              f"{args.trace} (open in Perfetto: ui.perfetto.dev)")
 
     for h in trainer.history[:: max(1, len(trainer.history) // 20)]:
         print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "

@@ -1,0 +1,7 @@
+"""Observability layer: simulated-clock tracing + telemetry (jax-free)."""
+from repro.obs.trace import (Counters, NULL_TRACER, NullTracer,
+                             REQUIRED_EVENT_KEYS, Tracer, load_trace,
+                             validate_events)
+
+__all__ = ["Counters", "NULL_TRACER", "NullTracer", "REQUIRED_EVENT_KEYS",
+           "Tracer", "load_trace", "validate_events"]

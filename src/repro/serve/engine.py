@@ -66,6 +66,7 @@ from repro.distributed import sharding as shd
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.models.layers import TRASH_PAGE, PagedKVCache
+from repro.obs.trace import NULL_TRACER
 from repro.serve import packing
 from repro.serve.metrics import MetricsRecorder
 from repro.serve.scheduler import Request, Scheduler
@@ -284,11 +285,17 @@ class ContinuousEngine:
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
                  qcfg: Optional[fqt.QuantConfig] = None,
                  pack_weights: bool = True,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 tracer=None):
         if cfg.family not in ("dense", "moe", "encdec"):
             raise NotImplementedError(
                 f"continuous batching serves dense/moe/encdec families; "
                 f"{cfg.family!r} stays on the lockstep Engine")
+        # host-side trace emission only (obs/trace.py): spans per tick,
+        # instants per jit compile — NEVER inside the jitted bodies below
+        # (fp4lint's obs-in-jit rule enforces this), so an attached tracer
+        # cannot perturb tokens or compile counts
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.cfg, self.scfg = cfg, scfg
         self.qcfg = qcfg if qcfg is not None else fqt.qaf_config()
         # same mesh-native path as the lockstep Engine (1-device default)
@@ -602,7 +609,8 @@ class ContinuousEngine:
                               slot_pages=self.n_pages_slot,
                               prefix_cache=scfg.prefix_cache,
                               prefix_cache_pages=scfg.prefix_cache_pages,
-                              prefill_chunk=scfg.prefill_chunk)
+                              prefill_chunk=scfg.prefill_chunk,
+                              tracer=self.tracer)
             carry = registry.make_decode_state(
                 self.cfg, self.n_slots, scfg.max_len,
                 kv_cache_format=scfg.kv_cache_format,
@@ -618,7 +626,7 @@ class ContinuousEngine:
         self.scheduler = sched
         for r in requests:
             sched.submit(r)
-        met = MetricsRecorder()
+        met = MetricsRecorder(tracer=self.tracer)
         self.metrics = met
         for r in requests:
             met.submitted(r.rid, r.arrival, deadline=r.deadline)
@@ -649,8 +657,23 @@ class ContinuousEngine:
                                             # scalars from prefill, synced
                                             # with the tick's one transfer
 
+        # jit-compile observation: cache-size polling costs a few python
+        # attribute reads per tick, so it runs only with a live tracer —
+        # the sizes are read, never asserted on, and emission is host-side
+        trc = self.tracer
+        if trc.enabled:
+            jit_progs = [["prefill", self._prefill, 0],
+                         ["prefill_suffix", self._prefill_sfx, 0],
+                         ["prefill_chunk", self._prefill_chk, 0],
+                         ["decode", self._decode, 0],
+                         ["verify", self._verify, 0]]
+            for rec in jit_progs:
+                rec[2] = rec[1]._cache_size()
+
         tick = 0
         while sched.has_work():
+            trc.set_time(tick)
+            trc.begin("engine", "tick")
             # -- lifecycle: hard aborts/timeouts due NOW fire before any
             # admission or prefill/decode work is issued this tick
             for slot, rid, stage, reason in sched.expire(tick):
@@ -828,6 +851,15 @@ class ContinuousEngine:
                 met.spec_tick(emitted_counts, scfg.spec_k)
             sched.count_tick(T, n_active=len(active))
             met.tick(queue_depth=len(sched.queue), n_active=len(active))
+            if trc.enabled:
+                for rec in jit_progs:
+                    n = rec[1]._cache_size()
+                    if n != rec[2]:
+                        trc.instant("engine", "jit_compile", program=rec[0],
+                                    cache_size=n)
+                        trc.counter("jit_compiles", n - rec[2])
+                        rec[2] = n
+            trc.end("engine", "tick")
             tick += 1
 
         self.margins = {rid: np.asarray(ms, np.float32)

@@ -36,6 +36,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.trace import Counters, NULL_TRACER
+
 PERCENTILES = (50, 95, 99)
 
 
@@ -63,13 +65,22 @@ def percentile_summary(values: Sequence[float],
 
 class MetricsRecorder:
     """Per-request lifecycle timestamps + per-tick gauges, summarized to
-    percentile dictionaries.  One recorder per ``run()`` trace."""
+    percentile dictionaries.  One recorder per ``run()`` trace.
 
-    def __init__(self):
+    Counter state lives on the obs-layer ``Counters`` substrate
+    (obs/trace.py) — the same primitive a ``Tracer`` accumulates into —
+    and when a tracer is attached every lifecycle event is mirrored into
+    the trace: lifecycle counters, first-token instants, queue/active
+    gauges per tick.  ``summary()`` shapes are unchanged (``Counters`` is
+    mapping-like, so ``dict(self.counters)`` still snapshots it)."""
+
+    def __init__(self, tracer=None):
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.requests: Dict[int, dict] = {}
         self.queue_depth: List[int] = []       # gauge, one entry per tick
         self.active_depth: List[int] = []      # decoding slots per tick
-        self.counters: Dict[str, int] = {}     # scheduler stats snapshot
+        self.counters = Counters()             # scheduler stats snapshot
+        self.lifecycle = Counters()            # own event tallies
         # speculative decoding (one sample per SLOT per verify tick):
         # tokens the verify emitted for that slot (accepted prefix + the
         # corrected token, 1..k) and its acceptance rate (accepted
@@ -86,33 +97,45 @@ class MetricsRecorder:
                               "admitted": None, "first": None,
                               "done": None, "ntokens": 0,
                               "cancelled": None}
+        self.lifecycle.inc("submitted")
+        self.tracer.counter("met_submitted", ts=int(arrival))
 
     def admitted(self, rid: int, tick: int) -> None:
         r = self.requests[rid]
         if r["admitted"] is None:       # re-admission after preemption
             r["admitted"] = int(tick)   # keeps the FIRST placement tick
+            self.lifecycle.inc("admitted")
 
     def first_token(self, rid: int, tick: int) -> None:
         r = self.requests[rid]
         if r["first"] is None:          # preemption replays the identical
             r["first"] = int(tick)      # stream; the first emission stands
+            self.lifecycle.inc("first_tokens")
+            self.tracer.instant(f"req:{rid}", "first_token", ts=int(tick),
+                                ttft=int(tick) - r["arrival"])
 
     def finished(self, rid: int, tick: int, ntokens: int) -> None:
         r = self.requests[rid]
         r["done"] = int(tick)
         r["ntokens"] = int(ntokens)
+        self.lifecycle.inc("finished")
+        self.tracer.counter("met_finished", ts=int(tick))
 
     def cancelled(self, rid: int, tick: int, stage: str,
                   reason: str) -> None:
         self.requests[rid]["cancelled"] = {"tick": int(tick),
                                            "stage": stage,
                                            "reason": reason}
+        self.lifecycle.inc("cancelled")
+        self.tracer.counter("met_cancelled", ts=int(tick))
 
     # ---- per-tick gauges / counters ------------------------------------
 
     def tick(self, queue_depth: int, n_active: int) -> None:
         self.queue_depth.append(int(queue_depth))
         self.active_depth.append(int(n_active))
+        self.tracer.gauge("queue_depth", int(queue_depth))
+        self.tracer.gauge("active_slots", int(n_active))
 
     def spec_tick(self, emitted: Sequence[int], k: int) -> None:
         """One speculative verify tick: ``emitted`` holds the per-slot
@@ -124,9 +147,12 @@ class MetricsRecorder:
         for n in emitted:
             self.spec_accepted.append(int(n))
             self.spec_rate.append((int(n) - 1) / max(1, k - 1))
+        if emitted:
+            self.tracer.counter("spec_emitted_tokens",
+                                sum(int(n) for n in emitted))
 
     def set_counters(self, stats: Dict[str, int]) -> None:
-        self.counters = {k: int(v) for k, v in stats.items()}
+        self.counters = Counters({k: int(v) for k, v in stats.items()})
 
     # ---- summaries -----------------------------------------------------
 

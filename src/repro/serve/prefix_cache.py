@@ -29,6 +29,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 
 @dataclasses.dataclass
 class _Node:
@@ -52,11 +54,12 @@ class PrefixCache:
     """
 
     def __init__(self, pool, page_size: int,
-                 max_pages: Optional[int] = None):
+                 max_pages: Optional[int] = None, tracer=None):
         if page_size < 1:
             raise ValueError("page_size must be >= 1")
         if max_pages is not None and max_pages < 1:
             raise ValueError("max_pages must be >= 1 (or None)")
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.pool = pool
         self.page_size = page_size
         self.max_pages = max_pages
@@ -110,8 +113,11 @@ class PrefixCache:
         if shared_pages:
             self.stats["hits"] += 1
             self.stats["hit_pages"] += shared_pages
+            self.tracer.counter("prefix_hits")
+            self.tracer.counter("prefix_hit_pages", shared_pages)
         else:
             self.stats["misses"] += 1
+            self.tracer.counter("prefix_misses")
 
     # ---- insertion -------------------------------------------------------
 
@@ -143,6 +149,8 @@ class PrefixCache:
             else:
                 nd.last_used = self._clock
             level, parent = nd.children, nd
+        if added:
+            self.tracer.counter("prefix_inserted_pages", added)
         if self.max_pages is not None and self._n_nodes > self.max_pages:
             self.evict(self._n_nodes - self.max_pages)
         return added
@@ -181,4 +189,7 @@ class PrefixCache:
             parent = victim.parent
             if parent is not None and self._evictable(parent):
                 heapq.heappush(heap, (parent.last_used, parent.page, parent))
+        if freed:
+            self.tracer.counter("pages_evicted", freed)
+            self.tracer.instant("prefix_cache", "lru_evict", n=freed)
         return freed

@@ -42,6 +42,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.models.layers import TRASH_PAGE
+from repro.obs.trace import NULL_TRACER
 from repro.serve.prefix_cache import PrefixCache
 
 
@@ -175,7 +176,12 @@ class Scheduler:
                  slot_pages: Optional[int] = None,
                  prefix_cache: bool = False,
                  prefix_cache_pages: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 tracer=None):
+        # host-side telemetry (obs/trace.py) — NULL_TRACER when untraced.
+        # One span per request (submit -> done/cancelled), instants for
+        # admit/preempt/prefill chunks, counters for page movements.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.n_slots = n_slots
         self.max_len = max_len
         self.page_size = page_size
@@ -199,7 +205,8 @@ class Scheduler:
         self.pool = PagePool(total_pages)
         self.total_pages = total_pages
         self.prefix_cache: Optional[PrefixCache] = (
-            PrefixCache(self.pool, page_size, prefix_cache_pages)
+            PrefixCache(self.pool, page_size, prefix_cache_pages,
+                        tracer=self.tracer)
             if prefix_cache else None)
         self.queue: deque = deque()
         self.slots: List[Optional[SlotState]] = [None] * n_slots
@@ -250,6 +257,12 @@ class Scheduler:
         if req.max_new < 1:
             raise ValueError(f"request {req.rid}: max_new must be >= 1")
         self.queue.append(req)
+        # the request span opens at queue entry (ts = arrival tick) and
+        # closes exactly once, in commit() or _record_cancel() — preemption
+        # requeues WITHOUT reopening, so span balance mirrors lifecycle
+        # conservation (submitted == completed + cancelled at drain)
+        self.tracer.begin(f"req:{req.rid}", "request", ts=req.arrival,
+                          plen=len(req.prompt), max_new=req.max_new)
 
     def _alloc_or_evict(self, n: int) -> Optional[List[int]]:
         """Allocate ``n`` pages; on exhaustion, evict LRU prefix-cache
@@ -286,6 +299,7 @@ class Scheduler:
         still needs the last prompt token's logits to sample from); the
         partial tail page is always recomputed into a private page.
         """
+        self.tracer.set_time(tick)
         placed = []
         for slot in range(self.n_slots):
             if not self.queue or self.slots[slot] is not None:
@@ -364,6 +378,13 @@ class Scheduler:
             self.stats["prefix_tokens_skipped"] += pfx
             self.stats["shared_pages"] += len(shared)
             self.stats["private_pages"] += len(priv)
+            trc = self.tracer
+            trc.instant(f"req:{req.rid}", "admit", slot=slot, pfx=pfx)
+            trc.counter("sched_admitted")
+            if shared:
+                trc.counter("pages_shared", len(shared))
+            if priv:
+                trc.counter("pages_private", len(priv))
             placed.append((slot, req, row.copy(), pfx))
         return placed
 
@@ -380,6 +401,7 @@ class Scheduler:
         — ``prefill_log`` records (tick, slot, rid, clen) as evidence."""
         if self.prefill_chunk is None:
             return []
+        self.tracer.set_time(tick)
         out = []
         for slot in range(self.n_slots):
             st = self.slots[slot]
@@ -395,6 +417,8 @@ class Scheduler:
                 self.prefix_cache.insert(self._pending_insert.pop(slot),
                                          self._rows[slot])
             self.prefill_log.append((tick, slot, st.rid, clen))
+            self.tracer.instant(f"req:{st.rid}", "prefill_chunk", slot=slot,
+                                start=start, clen=clen, last=last)
             out.append((slot, self._reqs[slot], start, clen, last))
         return out
 
@@ -411,7 +435,9 @@ class Scheduler:
         state (complete/preempt/cancel all funnel through here — ONE
         place owns the page/slot conservation invariant)."""
         req = self._reqs.pop(slot)
-        self.pool.free(self._held.pop(slot))
+        held = self._held.pop(slot)
+        self.pool.free(held)
+        self.tracer.counter("pages_released", len(held))
         self.slots[slot] = None
         self._rows.pop(slot)
         self._npages.pop(slot)
@@ -466,6 +492,10 @@ class Scheduler:
             req = dataclasses.replace(req, prompt=seq)
         self.queue.appendleft(req)
         self.stats["preemptions"] += 1
+        # the request span stays OPEN across preemption (it is still live,
+        # just requeued); the instant marks the eviction point
+        self.tracer.instant(f"req:{rid}", "preempt", slot=slot, keep=keep)
+        self.tracer.counter("sched_preempted")
 
     def ensure_capacity(self, steps: int, advance: bool = True
                         ) -> Tuple[List[Tuple[int, np.ndarray]], List[int]]:
@@ -504,6 +534,7 @@ class Scheduler:
                         self._held[slot].extend(pages)
                         self._npages[slot] = want
                         self.stats["demand_pages"] += n_new
+                        self.tracer.counter("pages_demand", n_new)
                         growth.append((slot, row.copy()))
                         break
                     victim = self._youngest_active()
@@ -580,6 +611,9 @@ class Scheduler:
             self._release_slot(slot)
             self._resume.pop(st.rid, None)
             self.stats["completed"] += 1
+            self.tracer.end(f"req:{st.rid}", "request",
+                            ntokens=len(st.tokens))
+            self.tracer.counter("sched_completed")
 
     # ---- request lifecycle: abort / timeout ------------------------------
 
@@ -599,6 +633,12 @@ class Scheduler:
         self.cancelled[req.rid] = {"reason": reason, "stage": stage,
                                    "tokens": np.asarray(tokens, np.int32)}
         self.stats["cancelled"] += 1
+        # every cancel path (client abort / timeout, queued or placed)
+        # funnels through here — the single span-closing point for
+        # requests that never complete
+        self.tracer.end(f"req:{req.rid}", "request", reason=reason,
+                        stage=stage)
+        self.tracer.counter("sched_cancelled")
 
     def cancel(self, rid: int, reason: str = "abort") -> bool:
         """Cancel request ``rid`` wherever it lives — queued (including
@@ -625,6 +665,7 @@ class Scheduler:
         """Run all due aborts/timeouts for ``tick`` (call at tick start,
         before ``admit``).  Returns [(slot_or_None, rid, stage, reason)] —
         the engine uses the freed slots to reset its host-side state."""
+        self.tracer.set_time(tick)
         out: List[Tuple[Optional[int], int, str, str]] = []
         for req in [r for r in self.queue
                     if self._due(r, tick) is not None]:

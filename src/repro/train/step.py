@@ -47,6 +47,8 @@ class TrainConfig:
     remat: bool = True
     probe_sigma: bool = True     # estimate σ_q each step (cheap, elementwise)
     sigma_spec: Any = None       # spec for the σ_q probe (default NVFP4-SR)
+    layer_stats: bool = False    # add per-leaf ‖g‖ to metrics (telemetry:
+                                 # the trainer's per-layer √3-floor series)
 
 
 def init_state(cfg: ModelConfig, tcfg: TrainConfig, key) -> TrainState:
@@ -124,6 +126,13 @@ def make_train_step(cfg: ModelConfig, qcfg: fqt.QuantConfig,
             "gnr": thr_state.ratio_ema,          # gradient-to-noise ratio
             "thr_crossed": thr_state.crossed.astype(jnp.float32),
         }
+        if tcfg.layer_stats:
+            # per-leaf gradient norms, stacked in tree-leaf order — the
+            # trainer pairs them with leaf paths/sizes on the host to
+            # emit the per-layer ‖g_i‖/(σ_q·√d_i) trace series
+            metrics["layer_gnorms"] = jnp.stack(
+                [jnp.sqrt(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                 for g in jax.tree.leaves(grads)])
         return TrainState(step + 1, params, opt, thr_state), metrics
 
     if mesh is None:
@@ -149,11 +158,13 @@ def jit_train_step(cfg: ModelConfig, qcfg: fqt.QuantConfig,
     st_sh = state_shardings(state_struct, mesh)
     batch_sh = {"tokens": NamedSharding(mesh, shd.batch_spec(mesh))}
     rep = NamedSharding(mesh, P())
+    mkeys = {"loss": 0, "nll": 0, "grad_norm": 0, "lr": 0, "sigma_q": 0,
+             "gnr": 0, "thr_crossed": 0}
+    if tcfg.layer_stats:
+        mkeys["layer_gnorms"] = 0
     return jax.jit(
         fn,
         in_shardings=(st_sh, batch_sh),
-        out_shardings=(st_sh, jax.tree.map(lambda _: rep, {
-            "loss": 0, "nll": 0, "grad_norm": 0, "lr": 0, "sigma_q": 0,
-            "gnr": 0, "thr_crossed": 0})),
+        out_shardings=(st_sh, jax.tree.map(lambda _: rep, mkeys)),
         donate_argnums=(0,),
     )

@@ -31,9 +31,10 @@ import jax
 import numpy as np
 
 from repro.checkpoint import ckpt
-from repro.core import fqt, qaf
+from repro.core import fqt, qaf, quantize, threshold
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models.config import ModelConfig
+from repro.obs.trace import NULL_TRACER
 from repro.optim import schedule
 from repro.train import step as step_mod
 
@@ -57,7 +58,14 @@ class TrainerConfig:
 class Trainer:
     def __init__(self, cfg: ModelConfig, qcfg: fqt.QuantConfig,
                  tcfg: step_mod.TrainConfig, run_cfg: TrainerConfig,
-                 data_cfg: DataConfig, mesh=None):
+                 data_cfg: DataConfig, mesh=None, tracer=None):
+        # quant-health telemetry (obs/trace.py, clock = optimizer step):
+        # per-layer √3-floor ratios, E4M3 scale saturation/underflow,
+        # rounding-mode tallies — emitted every ``log_every`` steps.  A
+        # live tracer turns on the step's per-leaf gradient norms.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if self.tracer.enabled and not tcfg.layer_stats:
+            tcfg = dataclasses.replace(tcfg, layer_stats=True)
         self.cfg, self.qcfg, self.tcfg = cfg, qcfg, tcfg
         self.run_cfg, self.data_cfg = run_cfg, data_cfg
         self.mesh = mesh
@@ -67,6 +75,7 @@ class Trainer:
         self.in_qaf = False
         self._stop = False
         self._step_fn = None
+        self._leaf_info = None          # [(path, size)] in grad-leaf order
 
     # ---- lifecycle -------------------------------------------------------
 
@@ -119,9 +128,14 @@ class Trainer:
 
             t0 = time.perf_counter()
             state, metrics = self._step_fn(state, batch)
-            metrics = {k: float(v) for k, v in
-                       jax.device_get(metrics).items()}
+            host = jax.device_get(metrics)
+            layer_gnorms = host.pop("layer_gnorms", None)
+            metrics = {k: float(v) for k, v in host.items()}
             dt = time.perf_counter() - t0
+
+            if (self.tracer.enabled
+                    and step % self.run_cfg.log_every == 0):
+                self._emit_telemetry(step, metrics, layer_gnorms, state)
 
             # straggler accounting (skip compile steps: first of each phase)
             if len(durations) >= 5:
@@ -154,6 +168,70 @@ class Trainer:
             if self.run_cfg.export_packed:
                 self.export_serving_artifact(state)
         return state
+
+    # ---- quant-health telemetry ------------------------------------------
+
+    def _emit_telemetry(self, step: int, metrics: Dict[str, float],
+                        layer_gnorms, state) -> None:
+        """One trace entry per logged step (clock = optimizer step): the
+        paper's §4 health signals, per layer.
+
+          * ``gnr``/``sigma_q`` gauges — the global ‖g‖/(σ_q·√d) EMA and
+            the SR-residual noise estimate the step computed;
+          * per-layer ``ratio`` gauges + the ``layers_below_sqrt3``
+            counter — layers whose OWN gradient signal is under the √3
+            floor (the global EMA averages these out; they are the early
+            warning the paper's switch rule reacts to);
+          * E4M3 block-scale saturation/underflow counters from a probe
+            weight quantized with the active forward spec;
+          * rounding-mode tallies — how many of the six quantization
+            points ran SR vs RtN this step (flips when QAF switches).
+        """
+        trc = self.tracer
+        trc.set_time(step)
+        trc.gauge("loss", metrics["loss"])
+        trc.gauge("grad_norm", metrics["grad_norm"])
+        trc.gauge("sigma_q", metrics["sigma_q"])
+        trc.gauge("gnr", metrics["gnr"])
+        if metrics["thr_crossed"] > 0.5:
+            trc.counter("sqrt3_crossed_steps")
+
+        qcfg = qaf.qaf_quant_config(self.qcfg) if self.in_qaf else self.qcfg
+        specs = [getattr(qcfg, p) for p in fqt.POINTS]
+        trc.counter("rounding_sr_points",
+                    sum(1 for s in specs if s is not None and s.stochastic))
+        trc.counter("rounding_rtn_points",
+                    sum(1 for s in specs
+                        if s is not None and not s.stochastic))
+
+        if layer_gnorms is not None:
+            if self._leaf_info is None:
+                leaves = jax.tree_util.tree_flatten_with_path(
+                    state.params)[0]
+                self._leaf_info = [(jax.tree_util.keystr(p), x.size)
+                                   for p, x in leaves]
+            below = 0
+            for (name, size), g in zip(self._leaf_info,
+                                       np.asarray(layer_gnorms)):
+                r = threshold.layer_ratio(float(g), metrics["sigma_q"],
+                                          size)
+                trc.gauge(f"ratio{name}", r, track="layers")
+                below += r < threshold.SQRT3
+            if below:
+                trc.counter("layers_below_sqrt3", below)
+
+        spec = qcfg.fwd_w
+        if spec is not None:
+            probe = None
+            for leaf in jax.tree.leaves(state.params):
+                if leaf.ndim >= 2 and leaf.shape[-1] % spec.block == 0:
+                    if probe is None or leaf.size > probe.size:
+                        probe = leaf
+            if probe is not None:
+                h = quantize.scale_health(probe, spec)
+                trc.counter("scale_blocks", h["blocks"])
+                trc.counter("scale_saturated", h["saturated"])
+                trc.counter("scale_underflow", h["underflow"])
 
     def export_serving_artifact(self, state) -> Optional[str]:
         """Quantize-once export: pack every GEMM weight with THIS run's

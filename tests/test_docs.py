@@ -76,14 +76,21 @@ def test_check_env_lint_mode(capsys):
     assert "fp4lint" in capsys.readouterr().out
 
 
+def test_check_env_obs_mode(capsys):
+    """--obs: span balance, counter conservation, tracer no-op contract,
+    Chrome trace schema (jax-free)."""
+    assert check_env.main(["--obs"]) == 0, capsys.readouterr().out
+    assert "observability" in capsys.readouterr().out
+
+
 def test_check_env_all_mode(capsys):
     """--all: every self-check (docs, serve, traffic, spec, mesh, lint,
-    deps) in one go."""
+    obs, deps) in one go."""
     assert check_env.main(["--all"]) == 0, capsys.readouterr().out
     out = capsys.readouterr().out
     for marker in ("docs snippets", "serving scheduler",
                    "traffic harness", "speculative decoding",
-                   "mesh partition specs", "fp4lint"):
+                   "mesh partition specs", "fp4lint", "observability"):
         assert marker in out, (marker, out)
 
 

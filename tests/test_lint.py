@@ -85,6 +85,21 @@ FIXTURES = {
         clean="w = qt.packed.astype(jnp.float32)\n",
         clean_path="src/repro/core/quantize.py",  # sanctioned dequant site
     ),
+    "obs-in-jit": dict(
+        firing="""
+        @jax.jit
+        def decode_step(x, tracer):
+            tracer.counter("decode_steps")
+            return x
+        """,
+        firing_path="src/repro/serve/x.py",
+        clean="""
+        def host_tick(x, tracer):
+            tracer.counter("decode_steps")   # host loop: emit freely
+            return decode_step(x)
+        """,
+        clean_path="src/repro/serve/x.py",
+    ),
 }
 
 
@@ -297,7 +312,7 @@ def test_empty_baseline_for_prng_and_spec_rules():
 
 
 def test_seeded_violations_caught_by_whole_repo_run(tmp_path):
-    """One scratch file violating all five rules, dropped into the scan
+    """One scratch file violating all six rules, dropped into the scan
     tree: the whole-repo run must catch every one of them."""
     scratch = os.path.join(REPO_ROOT, "src", "repro", "serve",
                            "_lint_seed_scratch.py")
@@ -310,6 +325,11 @@ def test_seeded_violations_caught_by_whole_repo_run(tmp_path):
         @jax.jit
         def f(x):
             return x * float(x.mean())
+
+        @jax.jit
+        def g(x, tracer):
+            tracer.counter("oops")
+            return x
         """)
     try:
         with open(scratch, "w", encoding="utf-8") as f:
@@ -319,7 +339,7 @@ def test_seeded_violations_caught_by_whole_repo_run(tmp_path):
                if f.path == "src/repro/serve/_lint_seed_scratch.py"}
         assert hit == set(all_rule_names()), hit
         new, _ = baseline_diff(findings, load_baseline(BASELINE))
-        assert len(new) >= 5             # none of them baselined away
+        assert len(new) >= 6             # none of them baselined away
     finally:
         os.unlink(scratch)
 

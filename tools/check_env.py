@@ -7,6 +7,7 @@
   PYTHONPATH=src python tools/check_env.py --spec   # speculative decoding
   PYTHONPATH=src python tools/check_env.py --mesh   # partition-spec check
   PYTHONPATH=src python tools/check_env.py --lint   # fp4lint AST invariants
+  PYTHONPATH=src python tools/check_env.py --obs    # tracing/telemetry
   PYTHONPATH=src python tools/check_env.py --all    # every self-check
 
 Default mode prints one line per dependency so a red test run can be
@@ -56,8 +57,16 @@ any stale baseline entry — the static invariants (rounding policy, PRNG
 stream discipline, PartitionSpec canonical form, trace hazards, packed
 dtypes; see docs/lint.md).  Also tier-1 (tests/test_docs.py).
 
+``--obs`` is a jax-free self-check of the observability layer
+(repro.obs.trace + the scheduler's instrumentation): span balance
+across the full request lifecycle (done / abort / timeout close the
+request span; preemption keeps it open), counter conservation against
+the scheduler's own stats and the page pool, the disabled tracer's
+no-op contract, and the Chrome-trace-event exporter schema.  Also
+tier-1 (tests/test_docs.py).
+
 ``--all`` runs every self-check above (docs, serve, traffic, spec, mesh,
-lint) plus the dependency report, and fails if any of them does.
+lint, obs) plus the dependency report, and fails if any of them does.
 """
 from __future__ import annotations
 
@@ -74,7 +83,7 @@ OPTIONAL = {
 }
 
 DOC_FILES = ("README.md", "docs/formats.md", "docs/serving.md",
-             "docs/lint.md")
+             "docs/lint.md", "docs/observability.md")
 
 
 def _probe(name: str):
@@ -751,6 +760,149 @@ def check_lint() -> int:
     return 0
 
 
+# ---- observability self-check -------------------------------------------------
+
+
+def check_obs() -> int:
+    """Jax-free self-check of the observability layer (repro.obs.trace +
+    the serving scheduler's instrumentation): the tracer's span-balance
+    accounting, the disabled tracer's no-op contract, a full request
+    lifecycle (completion, mid-prefill abort, queued timeout) with span
+    balance and counter conservation against the scheduler's own stats
+    and page pool, preemption keeping the request span open, and the
+    Chrome-trace-event exporter schema."""
+    for base in ("src",):
+        p = os.path.join(REPO_ROOT, base)
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    import json
+    import tempfile
+
+    import numpy as np
+    from repro.obs.trace import (NULL_TRACER, Counters, Tracer, load_trace,
+                                 validate_events)
+    from repro.serve.scheduler import Request, Scheduler
+
+    errors = []
+
+    # tracer unit: simulated clock, span balance, counter accumulation
+    trc = Tracer(clock="tick", process="check")
+    trc.set_time(3)
+    trc.begin("t", "work")
+    trc.counter("n", 2)
+    trc.counter("n")
+    trc.gauge("depth", 7)
+    trc.instant("t", "mark")
+    trc.end("t", "work")
+    if trc.counters["n"] != 3:
+        errors.append(f"counter accumulation: n = {trc.counters['n']} != 3")
+    if trc.spans_opened != 1 or trc.spans_closed != 1 or trc.open_spans():
+        errors.append(f"span accounting broken: {trc.spans_opened} opened, "
+                      f"{trc.spans_closed} closed, {trc.open_spans()} open")
+    if any(e["ts"] != 3 for e in trc.trace_events() if e["ph"] != "M"):
+        errors.append("set_time(3) did not stamp every event at ts=3")
+
+    # disabled tracer: inert, records nothing, refuses to export
+    if NULL_TRACER.enabled:
+        errors.append("NULL_TRACER claims to be enabled")
+    NULL_TRACER.begin("t", "x")
+    if NULL_TRACER.counter("n", 5) != 0 or NULL_TRACER.n_events != 0:
+        errors.append("NULL_TRACER recorded something")
+    try:
+        NULL_TRACER.export("/dev/null")
+        errors.append("NULL_TRACER.export did not refuse")
+    except RuntimeError:
+        pass
+
+    # counter substrate keeps the mapping protocol MetricsRecorder uses
+    c = Counters({"a": 1})
+    c.inc("a", 2)
+    if dict(c) != {"a": 3} or "a" not in c or len(c) != 1:
+        errors.append(f"Counters mapping protocol broken: {c!r}")
+
+    # full lifecycle with a tracer attached: one completion, one abort
+    # mid-prefill, one timeout while queued — every request span closes,
+    # and the tracer's counters agree with the scheduler's stats
+    trc = Tracer(clock="tick")
+    sched = Scheduler(n_slots=2, max_len=32, page_size=4, prefill_chunk=3,
+                      tracer=trc)
+    rng = np.random.default_rng(0)
+    sched.submit(Request(0, rng.integers(0, 99, 10), max_new=4))
+    sched.submit(Request(1, rng.integers(0, 99, 9), max_new=4, abort_at=1))
+    sched.submit(Request(2, rng.integers(0, 99, 6), max_new=4, arrival=0,
+                         timeout=1))
+    tick = 0
+    while sched.has_work() and tick < 30:
+        sched.expire(tick)
+        sched.admit(tick)
+        sched.prefill_work(tick)
+        T = sched.tick_steps(4, {})
+        sched.ensure_capacity(T)
+        for s_ in list(sched.decoding_slots()):
+            if T:
+                sched.commit(s_, np.full((T,), 7), eos_id=-1)
+        tick += 1
+    cnt = trc.counters
+    if trc.spans_opened != 3 or trc.open_spans():
+        errors.append(f"lifecycle spans unbalanced: {trc.spans_opened} "
+                      f"opened, {trc.open_spans()} still open at drain")
+    for cname, sname in (("sched_admitted", "admitted"),
+                         ("sched_completed", "completed"),
+                         ("sched_cancelled", "cancelled")):
+        if cnt.get(cname) != sched.stats[sname]:
+            errors.append(f"{cname} = {cnt.get(cname)} disagrees with "
+                          f"scheduler stats {sname} = {sched.stats[sname]}")
+    alloc = (cnt.get("pages_private") + cnt.get("pages_shared")
+             + cnt.get("pages_demand"))
+    if alloc != cnt.get("pages_released") or sched.pool.pages_in_use != 0:
+        errors.append(f"page counters not conserved at drain: "
+                      f"{alloc} allocated != {cnt.get('pages_released')} "
+                      f"released ({sched.pool.pages_in_use} still in use)")
+
+    # preemption keeps the request span OPEN (resume is the same request)
+    ptrc = Tracer(clock="tick")
+    psched = Scheduler(n_slots=1, max_len=32, page_size=4,
+                       prefix_cache=True, tracer=ptrc)
+    psched.submit(Request(7, np.arange(8), max_new=12))
+    psched.admit(0)
+    psched.commit(0, np.asarray([9]), eos_id=-1)
+    psched._preempt(0)
+    if ptrc.open_spans() != {("req:7", "request"): 1}:
+        errors.append(f"preemption closed the request span: "
+                      f"{ptrc.open_spans()}")
+    if ptrc.counters.get("sched_preempted") != 1:
+        errors.append("preemption did not bump sched_preempted")
+
+    # exporter round-trip: valid Chrome trace-event JSON, object form
+    fd, path = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    try:
+        trc.export(path)
+        with open(path) as f:
+            doc = json.load(f)
+        if not isinstance(doc, dict) or "traceEvents" not in doc:
+            errors.append("export is not the traceEvents object form")
+        events = load_trace(path)
+        problems = validate_events(events)
+        for pr in problems[:5]:
+            errors.append(f"exported event invalid: {pr}")
+        if len(events) != len(trc.trace_events()):
+            errors.append("export dropped events")
+        if doc.get("otherData", {}).get("clock") != "tick":
+            errors.append("export lost the clock annotation")
+    finally:
+        os.unlink(path)
+
+    if errors:
+        for e in errors:
+            print(f"OBS      {e}")
+        print(f"FATAL: {len(errors)} observability error(s)")
+        return 1
+    print("ok       observability (span balance, counter conservation vs "
+          "scheduler stats, no-op tracer contract, Chrome trace schema)")
+    return 0
+
+
 # ---- dependency report --------------------------------------------------------
 
 
@@ -790,7 +942,7 @@ def main(argv=None) -> int:
     if "--all" in argv:
         rc = 0
         for check in (check_docs, check_serve, check_traffic, check_spec,
-                      check_mesh, check_lint, check_deps):
+                      check_mesh, check_lint, check_obs, check_deps):
             rc |= check()
         return rc
     if "--docs" in argv:
@@ -805,6 +957,8 @@ def main(argv=None) -> int:
         return check_mesh()
     if "--lint" in argv:
         return check_lint()
+    if "--obs" in argv:
+        return check_obs()
     return check_deps()
 
 
